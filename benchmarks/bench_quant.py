@@ -1,0 +1,25 @@
+"""Fig. 5 — quantization precision loss vs Delta (1e5 .. 1e15).
+
+Paper claim: loss ~ 1/(10 Delta), flooring near 1e-16 at Delta=1e15 (float64
+resolution). Uses 3x3 CN(0,1)-style A as in the paper's setup.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import quantization as qz
+from .common import emit, timeit
+
+
+def run(rows: list) -> None:
+    rng = np.random.default_rng(0)
+    u = rng.normal(0, 1, 512)
+    for exp in range(5, 16):
+        delta = 10.0 ** exp
+        spec = qz.QuantSpec(delta=delta, zmin=-8, zmax=8)
+        q = np.asarray(qz.gamma2(u, spec), dtype=np.float64)
+        back = np.asarray(qz.inv_gamma2(q, spec))
+        loss = float(np.mean(np.abs(back - u)))
+        t = timeit(lambda: np.asarray(qz.gamma2(u, spec)))
+        emit(rows, f"quant_fig5_delta_1e{exp}", t,
+             f"precision_loss={loss:.3e};claim_1_over_10delta={1/(10*delta):.1e}")

@@ -1,0 +1,58 @@
+"""Roofline table rows from the dry-run report (deliverable g).
+
+Reads reports/dryrun.json (produced by ``python -m repro.launch.dryrun
+--all --multi-pod``) and emits one row per single-pod cell with the three
+terms, the bottleneck, MODEL_FLOPS ratio and a move-the-bottleneck note.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+_MOVES = {
+    "compute": "raise arithmetic intensity (larger per-device microbatch, "
+               "fewer remat recomputes)",
+    "memory": "cut HBM traffic: KV-cache/activation quantization (int8), "
+              "fusion (XLA op-level bytes are an upper bound)",
+    "collective": "overlap collectives with compute; Gamma-compressed "
+                  "psum (secure_agg) for DP-gradient bytes",
+}
+
+
+def run(rows: list, path: str = "reports/dryrun.json") -> None:
+    if not os.path.exists(path):
+        emit(rows, "roofline_SKIPPED", 0.0, f"no {path}; run the dry-run")
+        return
+    rep = json.load(open(path))
+    n_ok = n_skip = n_err = 0
+    for key, v in sorted(rep.items()):
+        if not key.endswith("/16x16"):
+            if v.get("status") == "ok":
+                n_ok += 1
+            continue
+        if v["status"] == "skipped":
+            n_skip += 1
+            emit(rows, f"roofline_{key.replace('/', '_')}", 0.0,
+                 f"SKIP:{v['reason'][:40]}")
+            continue
+        if v["status"] != "ok":
+            n_err += 1
+            emit(rows, f"roofline_{key.replace('/', '_')}", 0.0,
+                 f"ERROR:{v['error'][:60]}")
+            continue
+        n_ok += 1
+        rl = v["roofline"]
+        dom = rl["bottleneck"]
+        t_dom = max(rl["t_compute"], rl["t_memory"], rl["t_collective"])
+        frac = rl["t_compute"] / max(t_dom, 1e-30)
+        emit(rows, f"roofline_{key.replace('/', '_')}", t_dom,
+             f"tc={rl['t_compute']:.3e};tm={rl['t_memory']:.3e};"
+             f"tx={rl['t_collective']:.3e};bottleneck={dom};"
+             f"peakGB={v['memory']['peak_gb_per_dev']};"
+             f"useful={rl['useful_ratio']:.2f};"
+             f"roofline_frac={frac:.3f};"
+             f"move={_MOVES[dom][:48]}")
+    emit(rows, "roofline_summary", 0.0,
+         f"ok={n_ok};skip={n_skip};err={n_err}")

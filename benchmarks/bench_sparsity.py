@@ -1,0 +1,35 @@
+"""Fig. 7 — MSE and convergence vs sparsity (10..90%) for K in {3, 10}.
+
+Paper setup A in R^{10000x65536}; run at 1/16 scale. The paper's qualitative
+claims under test: (a) sparser signals converge faster / lower MSE, (b) more
+edge nodes slightly degrade accuracy while speeding wall-clock.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import admm
+from repro.data.synthetic import make_lasso
+from .common import emit, timeit
+
+
+def run(rows: list, M: int = 625, N: int = 4080, iters: int = 100) -> None:
+    lam = 0.05
+    for K in (3, 10):
+        Nk = N - (N % (3 * 10))   # divisible by both K values
+        for sp in (0.1, 0.3, 0.5, 0.7, 0.9):
+            inst = make_lasso(M, Nk, sparsity=sp, noise=0.01,
+                              seed=int(sp * 100) + K)
+            cfg = admm.ADMMConfig(lam=lam, iters=iters)
+            x, hist = admm.distributed_admm(jnp.asarray(inst.A),
+                                            jnp.asarray(inst.y), K, cfg)
+            mse = float(np.mean((np.asarray(x) - inst.x_true) ** 2))
+            # convergence speed: first iterate within 0.1% of the final
+            # objective trajectory (relative-change criterion)
+            errs = np.mean(
+                (np.asarray(hist) - inst.x_true[None, :]) ** 2, axis=1)
+            rel = np.abs(errs - errs[-1]) / max(errs[-1], 1e-30)
+            conv = int(np.argmax(rel <= 1e-3)) + 1
+            emit(rows, f"fig7_K{K}_sparsity{int(sp*100)}", 0.0,
+                 f"mse={mse:.5f};iters_to_conv={conv};mse_at_2={errs[1]:.4f}")

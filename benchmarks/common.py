@@ -1,0 +1,70 @@
+"""Shared benchmark utilities: timing, CSV emission, metrics."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, repeat: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(rows: list, name: str, seconds: float, derived: str = ""):
+    """Append a ``name,us_per_call,derived`` CSV row."""
+    rows.append(f"{name},{seconds * 1e6:.3f},{derived}")
+
+
+def auroc(y_true: np.ndarray, score: np.ndarray) -> float:
+    """Rank-based AUROC (no sklearn)."""
+    y = np.asarray(y_true).astype(bool).ravel()
+    s = np.asarray(score).ravel()
+    n_pos = int(y.sum())
+    n_neg = y.size - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    order = np.argsort(s, kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, y.size + 1)
+    # average ranks for ties
+    s_sorted = s[order]
+    i = 0
+    while i < y.size:
+        j = i
+        while j + 1 < y.size and s_sorted[j + 1] == s_sorted[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    return float((ranks[y].sum() - n_pos * (n_pos + 1) / 2.0)
+                 / (n_pos * n_neg))
+
+
+def auprc(y_true: np.ndarray, score: np.ndarray) -> float:
+    """Area under precision-recall via step integration."""
+    y = np.asarray(y_true).astype(bool).ravel()
+    s = np.asarray(score).ravel()
+    n_pos = int(y.sum())
+    if n_pos == 0:
+        return float("nan")
+    order = np.argsort(-s, kind="mergesort")
+    tp = np.cumsum(y[order])
+    fp = np.cumsum(~y[order])
+    precision = tp / (tp + fp)
+    recall = tp / n_pos
+    # step-wise integral (interpolated AP)
+    ap = 0.0
+    prev_r = 0.0
+    for p, r in zip(precision, recall):
+        if r > prev_r:
+            ap += p * (r - prev_r)
+            prev_r = r
+    return float(ap)

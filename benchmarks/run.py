@@ -1,0 +1,58 @@
+"""Benchmark harness: one function per paper table/figure.
+
+``python -m benchmarks.run [--only fig6,tab2,...]`` prints
+``name,us_per_call,derived`` CSV rows (and tees them per-bench as it goes).
+
+  fig5  bench_quant        quantization precision loss vs Delta
+  fig6  bench_mse          MSE: Cen/Dis/DP/3P (+beyond-paper variants)
+  fig7  bench_sparsity     sparsity x edge-count sweep
+  tab2  bench_throughput   ModMult/ModExp/EP OPS by key length
+  fig8  bench_total_time   T_pre/T_total by scheme and key length
+  tab345 bench_latency     per-node latency decomposition
+  fig10 bench_power_grid   power-network reconstruction AUROC/AUPRC
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("fig5", "bench_quant"),
+    ("fig6", "bench_mse"),
+    ("fig7", "bench_sparsity"),
+    ("tab2", "bench_throughput"),
+    ("fig8", "bench_total_time"),
+    ("tab345", "bench_latency"),
+    ("fig10", "bench_power_grid"),
+    ("roofline", "bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench keys (fig5,tab2,...)")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    rows: list[str] = ["name,us_per_call,derived"]
+    print(rows[0])
+    for key, mod_name in BENCHES:
+        if want and key not in want:
+            continue
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        t0 = time.time()
+        before = len(rows)
+        try:
+            mod.run(rows)
+        except Exception as e:  # noqa: BLE001
+            rows.append(f"{key}_ERROR,0,{type(e).__name__}:{e}")
+        for r in rows[before:]:
+            print(r, flush=True)
+        print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

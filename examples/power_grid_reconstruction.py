@@ -1,0 +1,37 @@
+"""Power-network topology reconstruction (paper §V-C, Fig. 10).
+
+Recovers which buses are connected from voltage/current observations by
+solving one LASSO per bus with the distributed private protocol, then scores
+AUROC/AUPRC against the ground-truth adjacency.
+
+Run:  PYTHONPATH=src python examples/power_grid_reconstruction.py
+"""
+import numpy as np
+
+from benchmarks.common import auroc, auprc
+from repro.core import protocol
+from repro.core.quantization import QuantSpec
+from repro.data import synthetic
+
+net = synthetic.make_power_network(n_bus=48, avg_degree=3.0, T=160, seed=0)
+spec = QuantSpec(delta=1e6, zmin=-64.0, zmax=64.0)
+
+scores, labels = [], []
+buses = range(0, 48, 6)
+for bus in buses:
+    inst = synthetic.bus_lasso(net, bus)
+    Npad = inst.A.shape[1] - (inst.A.shape[1] % 4)
+    cfg = protocol.ProtocolConfig(K=4, lam=0.1, iters=60, spec=spec,
+                                  cipher="plain", seed=0)
+    r = protocol.run_protocol(inst.A[:, :Npad], inst.y, cfg)
+    mask = np.ones(Npad, bool)
+    mask[bus] = False
+    scores.append(np.abs(r.x)[mask])
+    labels.append(net.adjacency[bus][:Npad].astype(bool)[mask])
+
+s = np.concatenate(scores)
+l = np.concatenate(labels)
+print(f"buses evaluated: {len(list(buses))}")
+print(f"AUROC = {auroc(l, s):.4f}   AUPRC = {auprc(l, s):.4f}")
+assert auroc(l, s) > 0.9, "reconstruction should be near-perfect"
+print("OK")

@@ -1,0 +1,37 @@
+"""Quickstart: privacy-preserving distributed LASSO in ~40 lines.
+
+A master node solves ``min 1/2||y - Ax||^2 + lam ||x||_1`` by renting compute
+from 3 edge nodes that never see y, z, v or x in the clear — the paper's
+3P-ADMM-PC2 with real Paillier encryption (small key for demo speed).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import admm, protocol
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import make_lasso
+
+# 1. a sparse recovery problem: 12-sparse x in R^48 from 24 measurements
+inst = make_lasso(M=24, N=48, sparsity=0.1, noise=0.01, seed=0)
+
+# 2. run the three-phase private protocol (gold Paillier, 256-bit demo key)
+spec = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+cfg = protocol.ProtocolConfig(K=3, rho=1.0, lam=0.05, iters=30, spec=spec,
+                              cipher="gold", key_bits=256, seed=0)
+result = protocol.run_protocol(inst.A, inst.y, cfg)
+
+# 3. compare against the unencrypted distributed solver
+x_ref, _ = admm.distributed_admm(jnp.asarray(inst.A), jnp.asarray(inst.y),
+                                 cfg.K, admm.ADMMConfig(lam=0.05, iters=30))
+gap = float(np.max(np.abs(result.x - np.asarray(x_ref))))
+mse = float(np.mean((result.x - inst.x_true) ** 2))
+
+print(f"recovered x: MSE vs truth = {mse:.5f}")
+print(f"privacy cost: |x_private - x_plain| = {gap:.2e} "
+      f"(pure quantization error)")
+print(f"crypto ops: {result.stats['ops']['iterate']}")
+print(f"traffic: {result.stats['traffic_bytes']}")
+assert gap < 1e-2
+print("OK")

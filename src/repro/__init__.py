@@ -1,0 +1,11 @@
+"""repro: 3P-ADMM-PC2 privacy computing + multi-pod JAX training framework.
+
+Exact big-integer limb arithmetic (core/bigint.py) requires 64-bit integer
+types, so x64 is enabled package-wide. All model code is dtype-explicit
+(bf16/f32), so enabling x64 does not change model numerics.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+"""Roofline analysis from compiled dry-run artifacts."""

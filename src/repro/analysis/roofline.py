@@ -1,0 +1,134 @@
+"""Three-term roofline from a compiled XLA module (no hardware needed).
+
+    compute term    = HLO_FLOPs   / peak_FLOP/s        (per chip)
+    memory term     = HLO_bytes   / HBM_bw             (per chip)
+    collective term = coll_bytes  / (links * link_bw)  (per chip)
+
+``compiled.cost_analysis()`` on the SPMD-partitioned module reports
+*per-device* FLOPs/bytes (verified empirically: an unsharded matmul reports
+its exact global FLOPs; a sharded one reports global/n_devices). Collective
+bytes are not in cost_analysis, so we parse the optimized HLO text and sum
+``max(result, operands)`` bytes per collective instruction.
+
+IMPORTANT: XLA counts a ``while`` body ONCE, so the dry-run lowers with
+layers UNROLLED; recurrent archs (xlstm sLSTM scan over sequence) still
+contain while loops — their cells carry an explicit note + analytic
+correction factor in EXPERIMENTS.md.
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (we credit 3 usable link-pairs per chip on a 2-D torus
+slice and report the assumption).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_LINK_BW = 50e9         # bytes/s per link
+ICI_LINKS = 3              # usable link-pairs credited per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    """Sum bytes over every typed shape literal in ``txt``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind max(result, operand) bytes summed over instances.
+
+    Parses lines like
+      ``%x = bf16[4096,512] all-reduce(bf16[4096,512] %y), ...``.
+    Bytes are per-device (the module is the per-device program).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*((?:\([^)]*\)|\S+))\s+(" + "|".join(_COLLECTIVES)
+                      + r")(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done(" in stripped:
+            continue  # paired with -start; count once
+        result_bytes = _shape_bytes(m.group(1))
+        args = stripped[m.end():]
+        operand_bytes = _shape_bytes(args.split(", replica_groups")[0]
+                                     if ", replica_groups" in args else args)
+        out[kind] += max(result_bytes, operand_bytes)
+        counts[kind] += 1
+    out_nonzero = {k: v for k, v in out.items() if v}
+    return {"bytes_by_kind": out_nonzero,
+            "counts": {k: v for k, v in counts.items() if v},
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per device
+    hbm_bytes: float           # per device
+    coll_bytes: float          # per device
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_total: float   # 6ND-style whole-step useful FLOPs
+    useful_ratio: float        # model_flops / (flops * n_devices)
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(cost: dict, hlo_text: str, n_devices: int,
+            model_flops_total: float,
+            coll_bytes_override: float | None = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    if coll_bytes_override is not None:
+        coll = dict(coll)
+        coll["total_bytes"] = coll_bytes_override
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_x = coll["total_bytes"] / (ICI_LINKS * ICI_LINK_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bn = max(terms, key=terms.get)
+    useful = model_flops_total / max(flops * n_devices, 1.0)
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=float(coll["total_bytes"]),
+                    t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                    bottleneck=bn, model_flops_total=model_flops_total,
+                    useful_ratio=useful)
+
+
+def model_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference forward;
+    decode counts one token per sequence in the batch."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * seq * batch
+    if shape_kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch      # decode: one token per sequence

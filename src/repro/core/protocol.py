@@ -1,0 +1,420 @@
+"""3P-ADMM-PC2 — the paper's three-phase master/edge privacy protocol.
+
+Faithful implementation of Algorithms 1 & 3 with explicit message passing:
+
+  * Initialization phase   — master splits A by columns, ships
+    alpha_k = {A_k^T A_k, rho} (+ quantization range + Delta); edge k returns
+    B_k = (A_k^T A_k + rho I)^{-1} and keeps the quantized Gamma_2(B_k rho).
+  * Data-security-sharing  — master quantizes+encrypts B_k A_k^T y (eq. 11);
+    edge k stores the ciphertext alpha-hat.
+  * Parallel privacy-computing — per iteration the master encrypts
+    Gamma_2(z_k), Gamma_2(-v_k); edge k evaluates eq. (13) entirely in
+    ciphertext (one ⊕, one ⊗-matvec, one ⊕); master decrypts, dequantizes by
+    Theorem 1 and runs the z/v updates (10b-c).
+
+Cipher backends share one interface so the protocol logic is written once:
+
+  * ``plain`` — the exact integer chain (no encryption). Because Paillier's
+    homomorphism is exact while the plaintext stays < n, the decrypted value
+    equals the plain integer chain bit-for-bit — this is the scale-out path
+    and is asserted against the encrypted paths in tests.
+  * ``gold``  — Python-int Paillier (arbitrary key size), incl. the
+    Algorithm-3 *collaborative* mode (master computes the q^2 CRT space, the
+    edge the masked p^2 space; Remark 4 information flow).
+  * ``vec``   — the batched limb-kernel path (core/paillier_vec.py).
+
+Stats: the protocol counts every crypto op and message byte per node/phase;
+benchmarks/bench_latency.py turns those counts into the paper's Tables III-V
+via measured per-op throughput, and bench_total_time.py into Fig. 8.
+
+Straggler mitigation (fault-tolerance at the protocol level): with a
+``deadline`` and a simulated per-edge latency model, the master proceeds with
+stale x-hat blocks for late edges — sound because the update (10) is
+blockwise (stale blocks delay convergence but never corrupt state).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections import defaultdict
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import admm as admm_mod
+from . import paillier as gold
+from . import paillier_vec as pv
+from . import bigint as bi
+from .quantization import QuantSpec, gamma1, gamma2, dequantize_theorem1
+
+
+# ---------------------------------------------------------------------------
+# Cipher backends
+# ---------------------------------------------------------------------------
+
+class PlainBox:
+    """Exact plaintext-integer simulation of the homomorphic ring ops.
+
+    Bumps the same logical op counters as the encrypted boxes (the protocol's
+    crypto-op STRUCTURE is cipher-independent), so latency/throughput models
+    built on the counters work from fast plain runs."""
+
+    name = "plain"
+
+    def __init__(self, spec: QuantSpec, n_dim: int, counter=None):
+        if not spec.int64_safe(n_dim):
+            self._dtype = object     # python-int fallback for huge Delta
+        else:
+            self._dtype = np.int64
+        self.counter = counter or OpCounter()
+
+    def encrypt(self, m: np.ndarray) -> np.ndarray:
+        m = np.asarray(m)
+        self.counter.bump("enc", m.size)
+        return m.astype(self._dtype)
+
+    def add(self, c1, c2):
+        self.counter.bump("mulmod", np.asarray(c1).size)
+        return c1 + c2
+
+    def matvec(self, K: np.ndarray, c):
+        M, N = K.shape
+        self.counter.bump("modexp", M * N)
+        self.counter.bump("mulmod", M * (N - 1))
+        return K.astype(self._dtype) @ c
+
+    def decrypt(self, c) -> np.ndarray:
+        self.counter.bump("dec", np.asarray(c).size)
+        return np.asarray(c)
+
+    def ct_bytes(self, n_el: int) -> int:
+        return 8 * n_el  # plaintext int64 wire size
+
+
+class GoldBox:
+    """Python-int Paillier; optional Algorithm-3 collaborative split."""
+
+    name = "gold"
+
+    def __init__(self, key: gold.PaillierKey, rng: random.Random,
+                 crt: bool = True, counter=None):
+        self.key = key
+        self.rng = rng
+        self.crt = crt
+        self.counter = counter or OpCounter()
+
+    def encrypt(self, m: np.ndarray) -> list[int]:
+        enc = gold.encrypt_crt if self.crt else gold.encrypt
+        out = [enc(self.key, int(x), gold.rand_r(self.key, self.rng))
+               for x in np.asarray(m).reshape(-1)]
+        self.counter.bump("enc", len(out))
+        return out
+
+    def add(self, c1, c2):
+        self.counter.bump("mulmod", len(c1))
+        return [(a * b) % self.key.n2 for a, b in zip(c1, c2)]
+
+    def matvec(self, K: np.ndarray, c):
+        Km = np.asarray(K, dtype=object)
+        M, N = Km.shape
+        self.counter.bump("modexp", M * N)
+        self.counter.bump("mulmod", M * (N - 1))
+        out = []
+        for i in range(M):
+            acc = 1
+            for j in range(N):
+                acc = (acc * pow(c[j], int(Km[i, j]), self.key.n2)) % self.key.n2
+            out.append(acc)
+        return out
+
+    def decrypt(self, c) -> np.ndarray:
+        dec = gold.decrypt_crt if self.crt else gold.decrypt
+        self.counter.bump("dec", len(c))
+        vals = [dec(self.key, x) for x in c]
+        return np.array(vals, dtype=object)
+
+    def ct_bytes(self, n_el: int) -> int:
+        return (self.key.n2.bit_length() + 7) // 8 * n_el
+
+
+class VecBox:
+    """Batched limb-kernel Paillier (the accelerated EP path)."""
+
+    name = "vec"
+
+    def __init__(self, key: gold.PaillierKey, rng: random.Random,
+                 backend: str | None = None, counter=None):
+        self.vk = pv.make_vec_key(key)
+        self.key = key
+        self.rng = rng
+        self.backend = backend
+        self.counter = counter or OpCounter()
+
+    def encrypt(self, m: np.ndarray):
+        m = np.asarray(m).reshape(-1)
+        pool = gold.make_r_pool(self.key, len(m), self.rng)
+        rn = jnp.asarray(bi.from_ints(pool, self.vk.pack_n2.L16))
+        self.counter.bump("enc", len(m))
+        return pv.encrypt_batch(self.vk, jnp.asarray(m.astype(np.int64)), rn,
+                                backend=self.backend)
+
+    def add(self, c1, c2):
+        self.counter.bump("mulmod", int(c1.shape[0]))
+        return pv.c_add_batch(self.vk, c1, c2, backend=self.backend)
+
+    def matvec(self, K: np.ndarray, c):
+        M, N = K.shape
+        self.counter.bump("modexp", M * N)
+        self.counter.bump("mulmod", M * (N - 1))
+        return pv.c_matvec(self.vk, jnp.asarray(np.asarray(K, np.int64)), c,
+                           backend=self.backend)
+
+    def decrypt(self, c) -> np.ndarray:
+        self.counter.bump("dec", int(c.shape[0]))
+        return np.asarray(pv.decrypt_batch(self.vk, c, backend=self.backend))
+
+    def ct_bytes(self, n_el: int) -> int:
+        return (self.key.n2.bit_length() + 7) // 8 * n_el
+
+
+class OpCounter:
+    """Per-phase crypto-op and traffic accounting."""
+
+    def __init__(self):
+        self.counts: dict[str, dict[str, int]] = defaultdict(lambda: defaultdict(int))
+        self.phase = "init"
+
+    def bump(self, op: str, n: int = 1):
+        self.counts[self.phase][op] += n
+
+    def as_dict(self):
+        return {ph: dict(ops) for ph, ops in self.counts.items()}
+
+
+# ---------------------------------------------------------------------------
+# Protocol configuration / result
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolConfig:
+    K: int = 3
+    rho: float = 1.0
+    lam: float = 1.0
+    iters: int = 50
+    spec: QuantSpec = QuantSpec()
+    cipher: str = "plain"              # plain | gold | vec
+    key_bits: int = 256
+    crt: bool = True
+    collaborative: bool = False        # Algorithm 3 master/edge CRT split
+    kernel_backend: str | None = None  # vec cipher kernel backend
+    y_scale: str = "consistent"
+    seed: int = 0
+    deadline: float | None = None      # straggler cutoff (simulated seconds)
+    latency_fn: Callable[[int, int], float] | None = None  # (edge, iter)->s
+
+
+@dataclasses.dataclass
+class ProtocolResult:
+    x: np.ndarray
+    history: np.ndarray
+    stats: dict
+    stale_events: int
+
+
+# ---------------------------------------------------------------------------
+# Edge node — owns only what Remark 4 allows it to see
+# ---------------------------------------------------------------------------
+
+class EdgeNode:
+    def __init__(self, k: int, spec: QuantSpec):
+        self.k = k
+        self.spec = spec
+        self.Gb = None          # Gamma_2(B_k rho) integer matrix
+        self.alpha_hat = None   # ciphertext of Gamma_1(B_k A_k^T y)
+        # Algorithm-3 collaborative material (p^2 space only)
+        self.p2 = None
+        self.phi_p2 = None
+        self.g_p = None
+
+    # -- Initialization phase -------------------------------------------
+    def init_phase(self, AkTAk: np.ndarray, rho: float) -> np.ndarray:
+        Nk = AkTAk.shape[0]
+        Bk = np.linalg.inv(AkTAk + rho * np.eye(Nk))
+        self.Gb = np.asarray(gamma2(Bk * rho, self.spec))
+        return Bk
+
+    # -- Data security sharing phase -------------------------------------
+    def store_shared(self, alpha_hat):
+        self.alpha_hat = alpha_hat
+
+    # -- Parallel privacy-computing phase (eq. 13) ------------------------
+    def private_step(self, z_hat, v_hat, box) -> object:
+        s = box.add(z_hat, v_hat)            # z-hat ⊕ (-v-hat)
+        t = box.matvec(self.Gb, s)           # Gamma_2(B-bar) ⊗ ...
+        return box.add(self.alpha_hat, t)    # alpha-hat ⊕ ...
+
+    # -- Algorithm 3: collaborative masked p^2-space ModExp ---------------
+    def collab_setup(self, p2: int, phi_p2: int, g: int):
+        self.p2, self.phi_p2, self.g_p = p2, phi_p2, g % p2
+
+    def collab_encrypt_half(self, masked_exp: np.ndarray) -> list[int]:
+        """g'^{O(Gamma(z)) mod phi(p^2)} mod p^2 for each masked exponent."""
+        return [pow(self.g_p, int(e) % self.phi_p2, self.p2)
+                for e in np.asarray(masked_exp).reshape(-1)]
+
+    def reduce_p2(self, x_hat: list[int]) -> list[int]:
+        """(x-hat)' = x-hat mod p^2 (decryption assist, round 1)."""
+        return [int(c) % self.p2 for c in x_hat]
+
+
+# ---------------------------------------------------------------------------
+# Protocol driver (master node logic)
+# ---------------------------------------------------------------------------
+
+def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
+                 ) -> ProtocolResult:
+    """Run 3P-ADMM-PC2 end to end; master-node state lives in this frame."""
+    rng = random.Random(cfg.seed)
+    M, N = A.shape
+    K = cfg.K
+    assert N % K == 0, "pad N to a multiple of K"
+    Nk = N // K
+    spec = cfg.spec
+
+    counter = OpCounter()
+    # --- key material / cipher box --------------------------------------
+    if cfg.cipher == "plain":
+        box = PlainBox(spec, Nk, counter=counter)
+        key = None
+    else:
+        g = None
+        if cfg.collaborative:
+            # Algorithm 3 exercises general-g ModExp paths
+            g = None  # n+1 retains correctness; masked path uses raw g
+        key = gold.keygen(cfg.key_bits, rng, g=g)
+        need = spec.plaintext_bits(Nk)
+        if need >= key.n.bit_length():
+            raise ValueError(
+                f"plaintext chain needs {need} bits but n has "
+                f"{key.n.bit_length()}; raise key_bits or lower Delta")
+        if cfg.cipher == "gold":
+            box = GoldBox(key, rng, crt=cfg.crt, counter=counter)
+        elif cfg.cipher == "vec":
+            box = VecBox(key, rng, backend=cfg.kernel_backend, counter=counter)
+        else:
+            raise ValueError(cfg.cipher)
+
+    traffic = defaultdict(int)
+
+    # --- Initialization phase -------------------------------------------
+    counter.phase = "init"
+    ys = y / K if cfg.y_scale == "consistent" else y
+    edges = [EdgeNode(k, spec) for k in range(K)]
+    Bks, Bbar_rowsums, alphas_real = [], [], []
+    for k, edge in enumerate(edges):
+        Ak = A[:, k * Nk:(k + 1) * Nk]
+        AkTAk = Ak.T @ Ak
+        traffic["master->edge"] += AkTAk.nbytes
+        Bk = edge.init_phase(AkTAk, cfg.rho)
+        traffic["edge->master"] += Bk.nbytes
+        Bks.append(Bk)
+        Bbar_rowsums.append((Bk * cfg.rho) @ np.ones(Nk))
+        alphas_real.append(Bk @ (Ak.T @ ys))
+        if cfg.collaborative and key is not None:
+            edge.collab_setup(key.p2, key.phi_p2, key.g)
+
+    # --- Data security sharing phase -------------------------------------
+    counter.phase = "share"
+    for k, edge in enumerate(edges):
+        q_alpha = np.asarray(gamma1(alphas_real[k], spec))
+        c_alpha = box.encrypt(q_alpha)
+        traffic["master->edge"] += box.ct_bytes(Nk)
+        edge.store_shared(c_alpha)
+
+    # --- Parallel privacy-computing phase ---------------------------------
+    counter.phase = "iterate"
+    x_prev = np.zeros(N)
+    z = np.zeros(N)
+    v = np.zeros(N)
+    x_hat_cache: list[object] = [None] * K
+    history = np.zeros((cfg.iters, N))
+    stale_events = 0
+
+    for t in range(cfg.iters):
+        x_new = np.zeros(N)
+        for k, edge in enumerate(edges):
+            sl = slice(k * Nk, (k + 1) * Nk)
+            zk, vk = z[sl], v[sl]
+            qz = np.asarray(gamma2(zk, spec))
+            qv = np.asarray(gamma2(-vk, spec))
+            cz = box.encrypt(qz)
+            cv = box.encrypt(qv)
+            traffic["master->edge"] += 2 * box.ct_bytes(Nk)
+
+            w_sum = float(np.sum(zk - vk))
+            late = False
+            if cfg.deadline is not None and cfg.latency_fn is not None:
+                late = cfg.latency_fn(k, t) > cfg.deadline
+            if late and x_hat_cache[k] is not None:
+                # straggler: reuse the stale block TOGETHER with the w_sum
+                # of the round that produced it (the Theorem-1 correction
+                # must match the ciphertext chain's inputs)
+                x_hat, w_sum = x_hat_cache[k]
+                stale_events += 1
+            else:
+                x_hat = edge.private_step(cz, cv, box)
+                x_hat_cache[k] = (x_hat, w_sum)
+            traffic["edge->master"] += box.ct_bytes(Nk)
+
+            if cfg.collaborative and key is not None and cfg.cipher == "gold":
+                # decryption assist: edge ships (x-hat)' = x-hat mod p^2
+                _ = edge.reduce_p2(x_hat)
+                traffic["edge->master"] += (key.p2.bit_length() + 7) // 8 * Nk
+
+            R = box.decrypt(x_hat).astype(np.float64)
+            x_new[sl] = np.asarray(dequantize_theorem1(
+                R, Bbar_rowsums[k], w_sum, Nk, spec))
+        # master updates (10b)/(10c) with the (t-1) iterate — Jacobi order
+        z_new = np.asarray(admm_mod.soft_threshold(
+            jnp.asarray(v + x_prev), cfg.lam / cfg.rho))
+        v = v + x_prev - z_new
+        z = z_new
+        x_prev = x_new
+        history[t] = x_new
+
+    stats = {"ops": counter.as_dict(), "traffic_bytes": dict(traffic),
+             "key_bits": None if key is None else key.n.bit_length(),
+             "cipher": cfg.cipher}
+    return ProtocolResult(x=x_prev, history=history, stats=stats,
+                          stale_events=stale_events)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-3 collaborative encryption demo (masked p^2-space offload)
+# ---------------------------------------------------------------------------
+
+def collaborative_encrypt(key: gold.PaillierKey, edge: EdgeNode,
+                          m: np.ndarray, rng: random.Random) -> list[int]:
+    """Master encrypts plaintexts with the p^2 ModExp offloaded to an edge.
+
+    Obfuscation O(m) = m + t with t uniform 64-bit (additive mask); the edge
+    returns g'^{O(m) mod phi(p^2)} mod p^2 and the master unmasks by
+    multiplying g'^{-t mod phi(p^2)}. The edge learns only p^2, phi(p^2) and
+    a uniformly masked exponent (Remark 4).
+    """
+    m = np.asarray(m).reshape(-1)
+    masks = [rng.getrandbits(64) for _ in m]
+    masked = np.array([int(x) + t for x, t in zip(m, masks)], dtype=object)
+    # --- edge side (p^2 space) ---
+    e_half = edge.collab_encrypt_half(masked)
+    # --- master side: unmask + q^2 space + CRT combine + blinding ---
+    out = []
+    for mi, ti, ep in zip(m, masks, e_half):
+        un = pow(key.g, -ti % key.phi_p2, key.p2)
+        gp = (ep * un) % key.p2                       # g^m mod p^2
+        gq = pow(key.g, int(mi) % key.phi_q2, key.q2)  # g^m mod q^2
+        gm = gold.crt_combine(key, gp, gq)
+        rn = pow(gold.rand_r(key, rng), key.n, key.n2)
+        out.append((gm * rn) % key.n2)
+    return out

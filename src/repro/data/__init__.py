@@ -1,0 +1,1 @@
+"""Data substrate: synthetic generators + checkpointable sharded pipeline."""

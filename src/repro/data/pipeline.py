@@ -1,0 +1,58 @@
+"""Checkpointable sharded data pipeline.
+
+Deterministic function of (seed, step): the cursor IS the state, so resuming
+from a checkpoint replays no batch and skips none. ``device_put`` lays each
+global batch out under the mesh sharding (batch dim over the DP axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import synthetic
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+    step: int = 0
+    prefix: int = 0              # VLM prefix embeddings per example
+    d_model: int = 0
+    enc_len: int = 0             # enc-dec frame length
+
+    def state(self) -> dict:
+        return {"seed": self.seed, "step": self.step}
+
+    def load_state(self, st: dict):
+        self.seed = int(st["seed"])
+        self.step = int(st["step"])
+
+    def next(self, mesh=None, dp_axes=("data",)):
+        b = synthetic.token_batch(self.vocab, self.batch, self.seq,
+                                  self.step, self.seed)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, self.step, 7]))
+        if self.prefix and self.d_model:
+            b["prefix_embeds"] = rng.normal(
+                0, 0.02, (self.batch, self.prefix, self.d_model)
+            ).astype(np.float32)
+        if self.enc_len and self.d_model:
+            b["frames"] = rng.normal(
+                0, 0.02, (self.batch, self.enc_len, self.d_model)
+            ).astype(np.float32)
+        self.step += 1
+        if mesh is None:
+            return b
+        spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+        out = {}
+        for k, v in b.items():
+            nd = v.ndim
+            s = P(*(list(spec) + [None] * (nd - 1)))
+            out[k] = jax.device_put(v, NamedSharding(mesh, s))
+        return out

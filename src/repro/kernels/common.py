@@ -1,0 +1,302 @@
+"""Shared radix-256 limb helpers for the Pallas kernels and their oracle.
+
+Kernel-internal representation: base-2^8 limbs held in int32. Rationale
+(DESIGN.md §2): TPU vector units have no 64-bit integer path; with 8-bit
+limbs every partial product is < 2^16 and a full 4096-bit convolution row
+accumulates to < 2^27, exactly in int32 — the same "high bitwidth -> wide
+low-bitwidth lanes" decomposition the paper performs for CUDA cores, re-sized
+for the TPU's int32 VPU (and int8-MXU-friendly if the convolution is ever
+re-cast as a Toeplitz matmul).
+
+Public arrays elsewhere in repro use 16-bit limbs (core/bigint.py); the
+converters below are exact and cheap.
+"""
+from __future__ import annotations
+
+import os as _os
+
+import jax
+import jax.numpy as jnp
+
+RADIX_BITS = 8
+RADIX = 1 << RADIX_BITS
+RADIX_MASK = RADIX - 1
+
+
+def limbs16_to8(x: jax.Array) -> jax.Array:
+    """(..., L) base-2^16 int32 -> (..., 2L) base-2^8 int32 (little-endian)."""
+    lo = x & 0xFF
+    hi = (x >> 8) & 0xFF
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*x.shape[:-1], 2 * x.shape[-1]).astype(jnp.int32)
+
+
+def limbs8_to16(x: jax.Array) -> jax.Array:
+    """(..., 2L) base-2^8 -> (..., L) base-2^16 (length must be even)."""
+    assert x.shape[-1] % 2 == 0
+    pairs = x.reshape(*x.shape[:-1], x.shape[-1] // 2, 2)
+    return (pairs[..., 0] + (pairs[..., 1] << 8)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-compatible (fori_loop + dynamic_slice only) radix-256 primitives.
+# These run both inside pallas_call bodies and as plain jnp (the oracle).
+# All operate on 2-D blocks (B, L).
+# ---------------------------------------------------------------------------
+
+# Carry strategy (§Perf iteration log):
+#   "seq"  — exact 2L-step sequential scan (one limb per step);
+#   "fold" — 4 vectorized radix-folding rounds bound every coefficient to
+#            [0, 256], then the residual one-bit cascade is resolved with a
+#            log-depth (generate, propagate) associative scan — the classic
+#            carry-lookahead adder, vectorized over the batch.
+#            MEASURED on XLA CPU: 1.9x SLOWER than "seq" (associative_scan
+#            lowers to log-depth concat materializations; single-core loop
+#            is cache-friendly). Hypothesis refuted for CPU; selectable for
+#            real-TPU evaluation (EXPERIMENTS.md §Perf).
+CARRY_IMPL = _os.environ.get("REPRO_CARRY_IMPL", "seq")
+
+
+def _carry2d_seq(acc: jax.Array) -> jax.Array:
+    bsz, nl = acc.shape
+
+    def step(i, st):
+        c, out = st
+        t = jax.lax.dynamic_slice(acc, (0, i), (bsz, 1))[:, 0] + c
+        out = jax.lax.dynamic_update_slice(out, (t & RADIX_MASK)[:, None],
+                                           (0, i))
+        return t >> RADIX_BITS, out
+
+    _, out = jax.lax.fori_loop(
+        0, nl, step, (jnp.zeros((bsz,), jnp.int32), jnp.zeros_like(acc)))
+    return out
+
+
+def _carry2d_fold(acc: jax.Array) -> jax.Array:
+    v = acc
+    # coefficients < 2^27; each fold divides the excess by 256, so four
+    # rounds leave v in [0, 256] (the +1 cascade case)
+    for _ in range(4):
+        lo = v & RADIX_MASK
+        hi = v >> RADIX_BITS
+        v = lo + jnp.pad(hi[:, :-1], ((0, 0), (1, 0)))
+    # one-bit carry cascade via carry-lookahead prefix
+    g = (v >> RADIX_BITS).astype(jnp.int32)          # generate (0/1)
+    low = v & RADIX_MASK
+    p = (low == RADIX_MASK).astype(jnp.int32)        # propagate
+
+    def combine(lhs, rhs):
+        g1, p1 = lhs
+        g2, p2 = rhs
+        return g2 | (p2 & g1), p1 & p2
+
+    g_pre, _ = jax.lax.associative_scan(combine, (g, p), axis=1)
+    # carry INTO limb k = combined generate of limbs [0, k-1]
+    c_in = jnp.pad(g_pre[:, :-1], ((0, 0), (1, 0)))
+    return (low + c_in) & RADIX_MASK
+
+
+def carry2d(acc: jax.Array) -> jax.Array:
+    """Exact carry propagation of int32 coefficients to base 256.
+
+    Overflow past the last limb is dropped (callers size outputs to avoid
+    information loss).
+    """
+    if CARRY_IMPL == "fold":
+        return _carry2d_fold(acc)
+    return _carry2d_seq(acc)
+
+
+def add2d(a: jax.Array, b: jax.Array) -> jax.Array:
+    return carry2d(a + b)
+
+
+def sub2d(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a - b mod 256^L (wrap-around)."""
+    bsz, nl = a.shape
+    diff = a - b
+
+    def step(i, st):
+        c, out = st
+        t = jax.lax.dynamic_slice(diff, (0, i), (bsz, 1))[:, 0] + c
+        borrow = (t < 0).astype(jnp.int32)
+        out = jax.lax.dynamic_update_slice(
+            out, (t + (borrow << RADIX_BITS))[:, None], (0, i))
+        return -borrow, out
+
+    _, out = jax.lax.fori_loop(
+        0, nl, step, (jnp.zeros((bsz,), jnp.int32), jnp.zeros_like(a)))
+    return out
+
+
+def cmp2d(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(B,) sign of a - b as big ints."""
+    d = jnp.sign(a - b)
+    bsz, nl = a.shape
+
+    def step(i, c):
+        x = jax.lax.dynamic_slice(d, (0, i), (bsz, 1))[:, 0]
+        return jnp.where(x != 0, x, c)
+
+    return jax.lax.fori_loop(0, nl, step, jnp.zeros((bsz,), jnp.int32))
+
+
+# Convolution strategy (§Perf iteration log):
+#   "loop"   — La sequential shift-and-add steps (the direct port of the
+#              paper's per-bit GPU decomposition);
+#   "matmul" — one constant-index gather building the per-row Toeplitz of b,
+#              then a single batched int matmul t = a @ Toeplitz(b) — the
+#              MXU-shaped form from DESIGN.md §2. MEASURED on the XLA CPU
+#              backend: 5.4x SLOWER than "loop" (gather materialization has
+#              no MXU to feed) — hypothesis refuted for CPU, kept selectable
+#              for real-TPU evaluation (EXPERIMENTS.md §Perf).
+MUL_IMPL = _os.environ.get("REPRO_MUL_IMPL", "loop")
+
+
+def _mul2d_loop(a: jax.Array, b: jax.Array) -> jax.Array:
+    bsz, la = a.shape
+    lb = b.shape[1]
+    acc = jnp.zeros((bsz, la + lb), jnp.int32)
+
+    def body(i, acc):
+        ai = jax.lax.dynamic_slice(a, (0, i), (bsz, 1))
+        seg = jax.lax.dynamic_slice(acc, (0, i), (bsz, lb))
+        return jax.lax.dynamic_update_slice(acc, seg + ai * b, (0, i))
+
+    return jax.lax.fori_loop(0, la, body, acc)
+
+
+def _mul2d_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    bsz, la = a.shape
+    lb = b.shape[1]
+    full = la + lb
+    k = jnp.arange(full)
+    i = jnp.arange(la)
+    idx = k[None, :] - i[:, None]                      # (la, full), static
+    valid = (idx >= 0) & (idx < lb)
+    idx_c = jnp.clip(idx, 0, lb - 1)
+    toep = jnp.where(valid[None], b[:, idx_c], 0)      # (bsz, la, full)
+    return jnp.einsum("bi,bif->bf", a, toep)
+
+
+def mul2d(a: jax.Array, b: jax.Array, out_limbs: int) -> jax.Array:
+    """Exact limb convolution (B, La) x (B, Lb) -> (B, out_limbs), base 256.
+
+    Every coefficient stays < La * 255^2 + carries < 2^31 for La <= 8192,
+    so int32 accumulation is exact in both implementations.
+    """
+    bsz, la = a.shape
+    lb = b.shape[1]
+    full = la + lb
+    acc = (_mul2d_matmul(a, b) if MUL_IMPL == "matmul"
+           else _mul2d_loop(a, b))
+    out = carry2d(acc)
+    if out_limbs <= full:
+        return out[:, :out_limbs]
+    return jnp.pad(out, ((0, 0), (0, out_limbs - full)))
+
+
+def cond_sub2d(r: jax.Array, m: jax.Array) -> jax.Array:
+    """r - m if r >= m else r; m broadcast/padded to r's width."""
+    if m.shape[1] < r.shape[1]:
+        m = jnp.pad(m, ((0, 0), (0, r.shape[1] - m.shape[1])))
+    if m.shape[0] == 1 and r.shape[0] != 1:
+        m = jnp.broadcast_to(m, r.shape)
+    geq = (cmp2d(r, m) >= 0)[:, None]
+    return jnp.where(geq, sub2d(r, m), r)
+
+
+def barrett2d(x: jax.Array, m: jax.Array, mu: jax.Array) -> jax.Array:
+    """x (B, 2L) mod m (1|B, L) with mu = floor(256^{2L}/m) (1|B, L+1)."""
+    bsz = x.shape[0]
+    L = m.shape[1]
+    if m.shape[0] == 1 and bsz != 1:
+        m = jnp.broadcast_to(m, (bsz, L))
+    if mu.shape[0] == 1 and bsz != 1:
+        mu = jnp.broadcast_to(mu, (bsz, mu.shape[1]))
+    if x.shape[1] < 2 * L:
+        x = jnp.pad(x, ((0, 0), (0, 2 * L - x.shape[1])))
+    q1 = x[:, L - 1:]                                   # L+1 limbs
+    q2 = mul2d(q1, mu, 2 * L + 2)
+    q3 = q2[:, L + 1:]                                  # L+1 limbs
+    r1 = x[:, :L + 1]
+    r2 = mul2d(q3, m, L + 1)
+    r = sub2d(r1, r2)
+    r = cond_sub2d(r, m)
+    r = cond_sub2d(r, m)
+    return r[:, :L]
+
+
+def mulmod2d(a, b, m, mu):
+    L = m.shape[1]
+    return barrett2d(mul2d(a, b, 2 * L), m, mu)
+
+
+def modexp2d(base, exp, m, mu):
+    """base^exp mod m; per-row exponents (B, Le); constant-time ladder.
+
+    Binary square-and-multiply: 2 mulmods per exponent bit (1 squaring + 1
+    selected multiply). See modexp2d_win4 for the windowed variant.
+    """
+    L = m.shape[1]
+    bsz = base.shape[0]
+    n_bits = exp.shape[1] * RADIX_BITS
+    one = jnp.zeros((bsz, L), jnp.int32).at[:, 0].set(1)
+    base = barrett2d(base, m, mu)
+
+    def body(j, st):
+        res, b = st
+        limb = jax.lax.dynamic_slice(exp, (0, j // RADIX_BITS), (bsz, 1))[:, 0]
+        bit = (limb >> (j % RADIX_BITS)) & 1
+        res = jnp.where((bit == 1)[:, None], mulmod2d(res, b, m, mu), res)
+        b = mulmod2d(b, b, m, mu)
+        return res, b
+
+    res, _ = jax.lax.fori_loop(0, n_bits, body, (one, base))
+    return res
+
+
+def modexp2d_win4(base, exp, m, mu):
+    """4-bit fixed-window ModExp (beyond-paper §Perf optimization).
+
+    Left-to-right over 4-bit windows: 4 squarings + 1 constant-time
+    table-select multiply per window = 1.25 mulmods/bit vs the binary
+    ladder's 2/bit (predicted ~1.6x; measured in EXPERIMENTS.md §Perf).
+    The 16-entry power table is built with 15 mulmods up front (amortized
+    over >= 64-bit exponents) and selected obliviously via masked sums —
+    no data-dependent addressing, preserving the constant-time property.
+    """
+    L = m.shape[1]
+    bsz = base.shape[0]
+    n_bits = exp.shape[1] * RADIX_BITS
+    n_win = n_bits // 4
+    assert n_bits % 4 == 0
+    one = jnp.zeros((bsz, L), jnp.int32).at[:, 0].set(1)
+    base = barrett2d(base, m, mu)
+
+    # table[t] = base^t, t = 0..15  (15 sequential mulmods)
+    def build(t, tab):
+        prev = jax.lax.dynamic_slice(tab, (t - 1, 0, 0), (1, bsz, L))[0]
+        nxt = mulmod2d(prev, base, m, mu)
+        return jax.lax.dynamic_update_slice(tab, nxt[None], (t, 0, 0))
+
+    tab0 = jnp.zeros((16, bsz, L), jnp.int32).at[0].set(one).at[1].set(base)
+    table = jax.lax.fori_loop(2, 16, build, tab0)
+
+    def body(w, res):
+        # windows processed MSB-first: window index j = n_win-1-w
+        j = n_win - 1 - w
+        limb = jax.lax.dynamic_slice(exp, (0, (4 * j) // RADIX_BITS),
+                                     (bsz, 1))[:, 0]
+        win = (limb >> ((4 * j) % RADIX_BITS)) & 0xF          # (bsz,)
+        # 4 squarings
+        for _ in range(4):
+            res = mulmod2d(res, res, m, mu)
+        # oblivious table select: sum_t [win == t] * table[t]
+        sel = jnp.zeros((bsz, L), jnp.int32)
+        onehot = (win[None, :] == jnp.arange(16, dtype=win.dtype)[:, None])
+        sel = jnp.sum(jnp.where(onehot[..., None], table, 0), axis=0)
+        sel = sel.astype(jnp.int32)
+        return mulmod2d(res, sel, m, mu)
+
+    return jax.lax.fori_loop(0, n_win, body, one)

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: whole ModExp (square-and-multiply) resident in VMEM.
+
+The paper's Algorithm 2 re-loads operands per Montgomery step; the GME work
+it cites shows the win is keeping ciphertext state in cache. Here the entire
+binary ladder — ``2 * exp_bits`` fused mulmods — runs inside one pallas_call,
+so the running result/base pair never leaves VMEM. Exponents are per-element
+(each plaintext/ciphertext has its own), and the ladder is constant-time
+(select, no data-dependent branches) as required for key-dependent exponents.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+
+def _modexp_kernel(base_ref, exp_ref, m_ref, mu_ref, o_ref):
+    o_ref[...] = cm.modexp2d(base_ref[...], exp_ref[...], m_ref[...], mu_ref[...])
+
+
+def _modexp_win4_kernel(base_ref, exp_ref, m_ref, mu_ref, o_ref):
+    o_ref[...] = cm.modexp2d_win4(base_ref[...], exp_ref[...], m_ref[...],
+                                  mu_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret",
+                                             "method"))
+def modexp_pallas(base8: jax.Array, exp8: jax.Array, m8: jax.Array,
+                  mu8: jax.Array, block_b: int = 128,
+                  interpret: bool = True, method: str = "binary") -> jax.Array:
+    """base^exp mod m over a batch: (B, L), (B, Le) -> (B, L), radix-256."""
+    bsz, L = base8.shape
+    assert bsz % block_b == 0, "pad batch to a block multiple (ops.py does)"
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        _modexp_win4_kernel if method == "win4" else _modexp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, exp8.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((1, m8.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((1, mu8.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, L), jnp.int32),
+        interpret=interpret,
+    )(base8, exp8, m8, mu8)

@@ -1,0 +1,180 @@
+"""Public jit'd wrappers over the crypto kernels.
+
+Callers hold big integers as radix-2^16 limb arrays (core/bigint.py format);
+these wrappers pack the modulus, convert to the kernels' radix-256 layout,
+pad the batch to block multiples, dispatch to a backend and convert back.
+
+Backends:
+  * ``ref``    — kernels/ref.py jnp oracle (compiled XLA; the fast CPU path)
+  * ``pallas`` — the Pallas kernels; ``interpret=True`` automatically when
+                 running on CPU (this container), compiled Mosaic on TPU.
+
+Barrett correctness requires the modulus to fill its top radix-256 limb, so
+``pack_modulus`` sizes L8 to the exact byte length (DESIGN.md §2 note on
+radix re-sizing vs. the paper's b-tilde choice).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import bigint as bi
+from . import common as cm
+from . import ref as ref_impl
+from .limb_mulmod import mulmod_pallas
+from .modexp import modexp_pallas
+
+DEFAULT_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "ref")
+
+# jitted-closure cache: keyed by (modulus, backend, op) — jax.jit dedups
+# shapes internally, so each (op, modulus, shape) traces exactly once.
+_JIT_CACHE: dict = {}
+
+
+def _cached_jit(key, builder):
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = _JIT_CACHE[key] = jax.jit(builder)
+    return fn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModulusPack:
+    """Precomputed modulus material for both radices."""
+    m_int: int
+    L16: int
+    L8: int
+    m16: np.ndarray    # (L16,)
+    mu16: np.ndarray   # (L16+1,)  floor(2^{32 L16} / m)
+    m8: np.ndarray     # (1, L8)
+    mu8: np.ndarray    # (1, L8+1) floor(256^{2 L8} / m)
+
+
+def pack_modulus(m: int) -> ModulusPack:
+    L8 = max(1, -(-m.bit_length() // 8))
+    L16 = max(1, -(-m.bit_length() // 16))
+    mu8 = (1 << (16 * L8)) // m  # 256^{2 L8} = 2^{16 L8}
+    mu8_limbs = np.zeros(L8 + 1, np.int32)
+    x = mu8
+    for i in range(L8 + 1):
+        mu8_limbs[i] = x & 0xFF
+        x >>= 8
+    assert x == 0
+    return ModulusPack(
+        m_int=m, L16=L16, L8=L8,
+        m16=bi.from_int(m, L16), mu16=bi.barrett_mu(m, L16),
+        m8=_to8(m, L8)[None, :], mu8=mu8_limbs[None, :],
+    )
+
+
+def _to8(x: int, n: int) -> np.ndarray:
+    out = np.zeros(n, np.int32)
+    for i in range(n):
+        out[i] = x & 0xFF
+        x >>= 8
+    if x:
+        raise ValueError("value does not fit limb count")
+    return out
+
+
+def _pad_batch(x: jax.Array, block_b: int) -> tuple[jax.Array, int]:
+    bsz = x.shape[0]
+    rem = (-bsz) % block_b
+    if rem:
+        x = jnp.concatenate([x, jnp.zeros((rem, x.shape[1]), x.dtype)], axis=0)
+    return x, bsz
+
+
+def _to_radix8(x16: jax.Array, L8: int) -> jax.Array:
+    x8 = cm.limbs16_to8(x16)
+    if x8.shape[-1] >= L8:
+        return x8[..., :L8]
+    return jnp.pad(x8, ((0, 0), (0, L8 - x8.shape[-1])))
+
+
+def _to_radix16(x8: jax.Array, L16: int) -> jax.Array:
+    if x8.shape[-1] < 2 * L16:
+        x8 = jnp.pad(x8, ((0, 0), (0, 2 * L16 - x8.shape[-1])))
+    return cm.limbs8_to16(x8)
+
+
+def mulmod(a16: jax.Array, b16: jax.Array, pack: ModulusPack,
+           backend: str | None = None, block_b: int = 128) -> jax.Array:
+    """(B, L16) x (B, L16) -> (B, L16): (a*b) mod m."""
+    backend = backend or DEFAULT_BACKEND
+    m8 = pack.m8
+    mu8 = pack.mu8
+    L8, L16 = pack.L8, pack.L16
+
+    if backend == "ref":
+        def body(a16, b16):
+            return _to_radix16(
+                ref_impl.mulmod_ref(_to_radix8(a16, L8), _to_radix8(b16, L8),
+                                    jnp.asarray(m8), jnp.asarray(mu8)), L16)
+        return _cached_jit((pack.m_int, "ref", "mulmod"), body)(a16, b16)
+    if backend == "pallas":
+        block_b = min(block_b, max(1, a16.shape[0]))
+        interp = _interpret()
+
+        def body(a16, b16):
+            a8, bsz = _pad_batch(_to_radix8(a16, L8), block_b)
+            b8, _ = _pad_batch(_to_radix8(b16, L8), block_b)
+            out8 = mulmod_pallas(a8, b8, jnp.asarray(m8), jnp.asarray(mu8),
+                                 block_b=block_b, interpret=interp)[:bsz]
+            return _to_radix16(out8, L16)
+        return _cached_jit((pack.m_int, "pallas", "mulmod", block_b), body)(
+            a16, b16)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+MODEXP_METHOD = os.environ.get("REPRO_MODEXP_METHOD", "win4")
+
+
+def modexp(base16: jax.Array, exp16: jax.Array, pack: ModulusPack,
+           backend: str | None = None, block_b: int = 128,
+           method: str | None = None) -> jax.Array:
+    """base^exp mod m over a batch; per-element exponents.
+
+    ``method``: "binary" (the paper's Algorithm-2 ladder) or "win4"
+    (4-bit fixed window, beyond-paper §Perf optimization; default).
+    Exponent bit-width must be a multiple of 4 for win4 (16-bit limbs
+    always satisfy this).
+    """
+    backend = backend or DEFAULT_BACKEND
+    method = method or MODEXP_METHOD
+    m8 = pack.m8
+    mu8 = pack.mu8
+    L8, L16 = pack.L8, pack.L16
+
+    if backend == "ref":
+        def body(base16, exp16):
+            return _to_radix16(
+                ref_impl.modexp_ref(_to_radix8(base16, L8),
+                                    cm.limbs16_to8(exp16),
+                                    jnp.asarray(m8), jnp.asarray(mu8),
+                                    method=method), L16)
+        return _cached_jit((pack.m_int, "ref", "modexp", method), body)(
+            base16, exp16)
+    if backend == "pallas":
+        block_b = min(block_b, max(1, base16.shape[0]))
+        interp = _interpret()
+
+        def body(base16, exp16):
+            b8, bsz = _pad_batch(_to_radix8(base16, L8), block_b)
+            e8, _ = _pad_batch(cm.limbs16_to8(exp16), block_b)
+            out8 = modexp_pallas(b8, e8, jnp.asarray(m8), jnp.asarray(mu8),
+                                 block_b=block_b, interpret=interp,
+                                 method=method)[:bsz]
+            return _to_radix16(out8, L16)
+        return _cached_jit((pack.m_int, "pallas", "modexp", block_b, method),
+                           body)(base16, exp16)
+    raise ValueError(f"unknown backend {backend!r}")

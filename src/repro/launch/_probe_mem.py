@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=256"
+"""Memory-strategy probe for train cells (dev tool, not a deliverable)."""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import registry, layers as L
+from repro.train import loop as loop_mod
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_9b")
+    ap.add_argument("--constraint", default="none",
+                    choices=["none", "seq", "hidden"])
+    ap.add_argument("--shardy", action="store_true")
+    ap.add_argument("--scan", action="store_true")
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    args = ap.parse_args()
+    if args.shardy:
+        jax.config.update("jax_use_shardy_partitioner", True)
+
+    cfg = get_config(args.arch)
+    mesh = jax.make_mesh((16, 16), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if args.constraint == "seq":
+        L.set_activation_sharding(NamedSharding(mesh, P("data", "model", None)))
+    elif args.constraint == "hidden":
+        L.set_activation_sharding(NamedSharding(mesh, P("data", None, "model")))
+
+    step = loop_mod.make_train_step(cfg, OptConfig(), use_scan=args.scan,
+                                    remat=args.remat)
+    state_shape = jax.eval_shape(
+        lambda: loop_mod.init_train_state(cfg, jax.random.PRNGKey(0)))
+    ms = {"data": 16, "model": 16}
+    p_spec = registry.param_pspecs(cfg, state_shape["params"], ms)
+    st_spec = {"params": p_spec, "opt": {"m": p_spec, "v": p_spec,
+                                         "count": P()}, "step": P()}
+    sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+    B, S = args.batch, args.seq
+    batch_shape = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                   "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    bspec = {"tokens": P("data"), "labels": P("data")}
+    j = jax.jit(step, in_shardings=(sh(st_spec), sh(bspec)),
+                out_shardings=(sh(st_spec),
+                               sh({"loss": P(), "grad_norm": P(), "lr": P()})))
+    t0 = time.time()
+    c = j.lower(state_shape, batch_shape).compile()
+    mem = c.memory_analysis()
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes) / 2**30
+    print(f"RESULT arch={args.arch} constraint={args.constraint} "
+          f"shardy={args.shardy} scan={args.scan} remat={args.remat} "
+          f"peak={peak:.1f}GB temp={mem.temp_size_in_bytes/2**30:.1f}GB "
+          f"args={mem.argument_size_in_bytes/2**30:.1f}GB "
+          f"compile={time.time()-t0:.0f}s "
+          f"flops={c.cost_analysis().get('flops'):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Re-run selected dry-run cells and merge into an existing report (dev
+tool; used to patch cells recorded before a methodology fix)."""
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="reports/dryrun.json")
+    ap.add_argument("--cells", required=True,
+                    help="comma list arch/shape[,arch/shape...]")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    report = json.load(open(args.report)) if os.path.exists(args.report) \
+        else {}
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    patch: dict = {}
+    for cell in args.cells.split(","):
+        arch, shape = cell.split("/")
+        run_cell(arch, shape, mesh, report=patch,
+                 fast="pod" in mesh.axis_names)
+    report.update(patch)
+    with open(args.report, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"patched {len(patch)} cells -> {args.report}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: dense/MoE decoder LMs, enc-dec, xLSTM, Griffin (RG-LRU), VLM.
+
+Pure-JAX functional models: ``init_params(cfg, key)`` builds a pytree,
+``forward/prefill/decode_step`` apply it, ``param_pspecs(cfg)`` mirrors the
+tree with PartitionSpecs for the production mesh. See registry.py.
+"""

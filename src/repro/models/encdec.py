@@ -1,0 +1,242 @@
+"""Encoder-decoder transformer (SeamlessM4T-medium text/speech backbone).
+
+The modality frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d_model) — here the encoder
+consumes them directly (no fbank/wav2vec stack). The decoder is a standard
+causal LM with cross-attention; decode shapes exercise the decoder KV cache
+plus a fixed cross-attention memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def init_enc_layer(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_mlp": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": L.init_attn(k1, cfg),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_dec_layer(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln_self": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_cross": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_mlp": jnp.zeros((cfg.d_model,), jnp.float32),
+        "self_attn": L.init_attn(k1, cfg),
+        "cross_attn": L.init_attn(k2, cfg),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(cfg, key) -> dict:
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.dec_layers)
+    return {
+        "embed": L.embed_init(kt, cfg.padded_vocab, cfg.d_model),
+        "enc": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+        "ln_enc": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": L.dense_init(kh, (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def encode(params, frames, cfg, use_scan=True, remat=False):
+    """frames: (B, S_enc, d) precomputed frontend embeddings."""
+    x = frames.astype(L.cdtype(cfg))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, lp):
+        hn = L.rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["attn"], hn, cfg, positions)
+        o = L.attention(q, k, v, causal=False)
+        h = h + L.attn_out(lp["attn"], o, cfg)
+        hn = L.rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+        return L.constrain_acts(h + L.mlp(lp["mlp"], hn, cfg.act)), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if use_scan:
+        x, _ = jax.lax.scan(body, x, params["enc"])
+    else:
+        for i in range(cfg.enc_layers):
+            lp = jax.tree.map(lambda a: a[i], params["enc"])
+            x, _ = body(x, lp)
+    return L.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _dec_block(lp, h, memory, cfg, positions, mem_positions):
+    hn = L.rms_norm(h, lp["ln_self"], cfg.norm_eps)
+    q, k, v = L.qkv_proj(lp["self_attn"], hn, cfg, positions)
+    o = L.attention(q, k, v, causal=True)
+    h = h + L.attn_out(lp["self_attn"], o, cfg)
+    hn = L.rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+    q, _, _ = L.qkv_proj(lp["cross_attn"], hn, cfg, positions)
+    mk = (memory @ lp["cross_attn"]["wk"].astype(memory.dtype))
+    mv = (memory @ lp["cross_attn"]["wv"].astype(memory.dtype))
+    B, T, _ = memory.shape
+    mk = mk.reshape(B, T, cfg.n_kv, cfg.hd)
+    mv = mv.reshape(B, T, cfg.n_kv, cfg.hd)
+    o = L.attention(q, mk, mv, causal=False)
+    h = h + L.attn_out(lp["cross_attn"], o, cfg)
+    hn = L.rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+    return h + L.mlp(lp["mlp"], hn, cfg.act)
+
+
+def forward(params, tokens, cfg, *, frames=None, use_scan=True, remat=False,
+            **_):
+    """Training forward: frames -> encoder; tokens -> decoder; logits."""
+    memory = encode(params, frames, cfg, use_scan, remat)
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    mem_positions = jnp.arange(memory.shape[1])[None, :]
+
+    def body(h, lp):
+        out = _dec_block(lp, h, memory, cfg, positions, mem_positions)
+        return L.constrain_acts(out), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if use_scan:
+        x, _ = jax.lax.scan(body, x, params["dec"])
+    else:
+        for i in range(cfg.dec_layers):
+            lp = jax.tree.map(lambda a: a[i], params["dec"])
+            x, _ = body(x, lp)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return (x @ params["head"].astype(dt)).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg, **fwd_kwargs):
+    logits = forward(params, batch["tokens"], cfg, frames=batch["frames"],
+                     **fwd_kwargs)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: decoder self-attn KV cache + precomputed cross K/V
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.dec_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def precompute_cross(params, memory, cfg):
+    """Per-layer cross-attention K/V from the encoder memory."""
+    B, T, _ = memory.shape
+
+    def one(lp):
+        mk = (memory @ lp["cross_attn"]["wk"].astype(memory.dtype))
+        mv = (memory @ lp["cross_attn"]["wv"].astype(memory.dtype))
+        return (mk.reshape(B, T, cfg.n_kv, cfg.hd),
+                mv.reshape(B, T, cfg.n_kv, cfg.hd))
+
+    ks, vs = jax.vmap(one)(params["dec"])
+    return {"ck": ks, "cv": vs}
+
+
+def prefill(params, tokens, cfg, cache, *, frames=None, use_scan=True, **_):
+    memory = encode(params, frames, cfg, use_scan)
+    cross = precompute_cross(params, memory.astype(L.cdtype(cfg)), cfg)
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    S = tokens.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mem_positions = jnp.arange(memory.shape[1])[None, :]
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        hn = L.rms_norm(h, lp["ln_self"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["self_attn"], hn, cfg, positions)
+        o = L.attention(q, k, v, causal=True)
+        h = h + L.attn_out(lp["self_attn"], o, cfg)
+        hn = L.rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+        q, _, _ = L.qkv_proj(lp["cross_attn"], hn, cfg, positions)
+        o = L.attention(q, ck, cv, causal=False)
+        h = h + L.attn_out(lp["cross_attn"], o, cfg)
+        hn = L.rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+        return h + L.mlp(lp["mlp"], hn, cfg.act), (k, v)
+
+    if use_scan:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["dec"], cross["ck"],
+                                             cross["cv"]))
+    else:   # unrolled (dry-run cost probes)
+        ks_l, vs_l = [], []
+        for i in range(cfg.dec_layers):
+            xs_i = jax.tree.map(lambda a: a[i],
+                                (params["dec"], cross["ck"], cross["cv"]))
+            x, (k, v) = body(x, xs_i)
+            ks_l.append(k)
+            vs_l.append(v)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    cache["cross"] = cross
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    return (x @ params["head"].astype(dt)).astype(jnp.float32), cache
+
+
+def decode_step(params, token, cache, cfg, use_scan=True, **_):
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[token][:, None, :]
+    pos = cache["len"]
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    cross = cache["cross"]
+
+    z0 = jnp.zeros((), jnp.int32)
+
+    def body(h, xs):
+        lp, kc, vc, ck, cv = xs
+        hn = L.rms_norm(h, lp["ln_self"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["self_attn"], hn, cfg, positions)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (z0, pos, z0, z0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (z0, pos, z0, z0))
+        o = L.attention_decode(q, kc, vc, pos + 1)
+        h = h + L.attn_out(lp["self_attn"], o, cfg)
+        hn = L.rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+        q, _, _ = L.qkv_proj(lp["cross_attn"], hn, cfg, positions)
+        o = L.attention_decode(q, ck, cv, ck.shape[1])
+        h = h + L.attn_out(lp["cross_attn"], o, cfg)
+        hn = L.rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+        return h + L.mlp(lp["mlp"], hn, cfg.act), (kc, vc)
+
+    if use_scan:
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"],
+                      cross["ck"], cross["cv"]))
+    else:   # unrolled (dry-run cost probes)
+        ks_l, vs_l = [], []
+        for i in range(cfg.dec_layers):
+            xs_i = jax.tree.map(
+                lambda a: a[i], (params["dec"], cache["k"], cache["v"],
+                                 cross["ck"], cross["cv"]))
+            x, (kc, vc) = body(x, xs_i)
+            ks_l.append(kc)
+            vs_l.append(vc)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    new_cache = {"k": ks, "v": vs, "len": pos + 1, "cross": cross}
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return (x @ params["head"].astype(dt)).astype(jnp.float32)[:, 0], new_cache

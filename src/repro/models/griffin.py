@@ -1,0 +1,279 @@
+"""Griffin / RecurrentGemma (arXiv:2402.19427): RG-LRU recurrent blocks
+interleaved with local sliding-window MQA attention (pattern 2 recurrent : 1
+attention), GeGLU MLPs.
+
+RG-LRU: a_t = exp(-c softplus(Lam) * r_t);  h_t = a_t h_{t-1}
+        + sqrt(1 - a_t^2) * (i_t * x_t)
+Training evaluates the linear recurrence with jax.lax.associative_scan
+(parallel, log-depth — this is the sub-quadratic path that makes long_500k
+lowerable); decode carries the (B, lru_width) state.
+
+The local-attention decode cache is a ring buffer of ``window`` slots with
+absolute-position tags (RoPE is applied at write time), so a 500k-step decode
+holds only window x d bytes of cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+_LRU_C = 8.0
+
+
+def lru_width(cfg) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def layer_kind(cfg, idx: int) -> str:
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    return pat[idx % len(pat)]
+
+
+def init_block(key, cfg, idx: int) -> dict:
+    d = cfg.d_model
+    w = lru_width(cfg)
+    ks = jax.random.split(key, 10)
+    p = {"ln_mix": jnp.zeros((d,), jnp.float32),
+         "ln_mlp": jnp.zeros((d,), jnp.float32),
+         "mlp": L.init_mlp(ks[0], d, cfg.d_ff)}
+    if layer_kind(cfg, idx) == "attn":
+        p["attn"] = L.init_attn(ks[1], cfg)
+    else:
+        p.update({
+            "w_x": L.dense_init(ks[2], (d, w)),        # recurrent branch
+            "w_gate": L.dense_init(ks[3], (d, w)),     # GeLU gate branch
+            "conv": jax.random.normal(ks[4], (cfg.conv_width, w),
+                                      jnp.float32) * 0.1,
+            "w_rg": L.dense_init(ks[5], (w, w), scale=0.02),   # recurrence gate
+            "w_ig": L.dense_init(ks[6], (w, w), scale=0.02),   # input gate
+            "lam": jnp.full((w,), 1.0, jnp.float32),   # softplus(lam)~1.3
+            "w_y": L.dense_init(ks[7], (w, d)),
+        })
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def _lru_coeffs(p, x):
+    """x (B,S,w) -> (a, b) of the recurrence h = a*h_prev + b, float32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["w_rg"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ p["w_ig"].astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    return a, b
+
+
+def rg_lru_scan(p, x):
+    """Parallel (associative-scan) evaluation over the sequence axis."""
+    a, b = _lru_coeffs(p, x)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return b_s.astype(x.dtype)      # h_t with h_0 prior = 0
+
+
+def rg_lru_step(p, x1, h_prev):
+    """One decode step: x1 (B,1,w), h_prev (B,w) -> (y (B,1,w), h)."""
+    a, b = _lru_coeffs(p, x1)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h[:, None, :].astype(x1.dtype), h
+
+
+def causal_conv(p, x, state=None):
+    """Depthwise causal conv width cw. state: (B, cw-1, w) history."""
+    cw = p["conv"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv"][i].astype(x.dtype)
+              for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def rec_mix(p, x, cfg, conv_state=None, lru_state=None, decode=False):
+    dt = x.dtype
+    xi = x @ p["w_x"].astype(dt)
+    gate = jax.nn.gelu((x @ p["w_gate"].astype(dt)).astype(jnp.float32),
+                       approximate=True).astype(dt)
+    xi, conv_state = causal_conv(p, xi, conv_state)
+    if decode:
+        y, lru_state = rg_lru_step(p, xi, lru_state)
+    else:
+        y = rg_lru_scan(p, xi)
+    out = (y * gate) @ p["w_y"].astype(dt)
+    return out, conv_state, lru_state
+
+
+def block_forward(p, x, cfg, idx, positions):
+    h = L.rms_norm(x, p["ln_mix"], cfg.norm_eps)
+    if layer_kind(cfg, idx) == "attn":
+        q, k, v = L.qkv_proj(p["attn"], h, cfg, positions)
+        o = L.attention(q, k, v, causal=True, window=cfg.window)
+        mix = L.attn_out(p["attn"], o, cfg)
+    else:
+        mix, _, _ = rec_mix(p, h, cfg)
+    x = x + mix
+    h = L.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h, "gelu")
+
+
+def init_params(cfg, key) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "blocks": [init_block(ks[1 + i], cfg, i) for i in range(cfg.n_layers)],
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": L.dense_init(ks[-1], (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def forward(params, tokens, cfg, *, remat=False, **_):
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    for i, bp in enumerate(params["blocks"]):
+        def fn(bp_, x_, _i=i):
+            return block_forward(bp_, x_, cfg, _i, positions)
+        if remat:
+            fn = jax.checkpoint(fn)
+        x = L.constrain_acts(fn(bp, x))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return (x @ params["head"].astype(dt)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Serving: ring-buffer window cache + recurrent states
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len=0, dtype=jnp.bfloat16):
+    w = lru_width(cfg)
+    win = cfg.window or 2048
+    states = []
+    for i in range(cfg.n_layers):
+        if layer_kind(cfg, i) == "attn":
+            states.append({
+                "k": jnp.zeros((batch, win, cfg.n_kv, cfg.hd), dtype),
+                "v": jnp.zeros((batch, win, cfg.n_kv, cfg.hd), dtype),
+                "pos": jnp.full((win,), -1, jnp.int32),
+            })
+        else:
+            states.append({
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+                "h": jnp.zeros((batch, w), jnp.float32),
+            })
+    return {"states": states, "len": jnp.zeros((), jnp.int32)}
+
+
+def _attn_decode_ring(p, h, st, cfg, pos):
+    win = st["k"].shape[1]
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    q, k, v = L.qkv_proj(p["attn"], h, cfg, positions)
+    slot = (pos % win).astype(jnp.int32)
+    z0 = jnp.zeros((), jnp.int32)
+    st = dict(st)
+    st["k"] = jax.lax.dynamic_update_slice(st["k"], k.astype(st["k"].dtype),
+                                           (z0, slot, z0, z0))
+    st["v"] = jax.lax.dynamic_update_slice(st["v"], v.astype(st["v"].dtype),
+                                           (z0, slot, z0, z0))
+    st["pos"] = jax.lax.dynamic_update_slice(st["pos"],
+                                             pos[None].astype(jnp.int32),
+                                             (slot,))
+    # attend over valid ring slots
+    B, _, H, D = q.shape
+    KV = st["k"].shape[2]
+    qg = q.reshape(B, 1, KV, H // KV, D).astype(jnp.float32)
+    s = jnp.einsum("bsgrd,btgd->bgrst", qg,
+                   st["k"].astype(jnp.float32)) / float(np.sqrt(D))
+    valid = st["pos"] >= 0
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    pmax = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrst,btgd->bsgrd", pmax, st["v"].astype(jnp.float32))
+    o = o.reshape(B, 1, H, D).astype(h.dtype)
+    return L.attn_out(p["attn"], o, cfg), st
+
+
+def decode_step(params, token, cache, cfg, **_):
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[token][:, None, :]
+    pos = cache["len"]
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        st = cache["states"][i]
+        h = L.rms_norm(x, bp["ln_mix"], cfg.norm_eps)
+        if layer_kind(cfg, i) == "attn":
+            mix, st = _attn_decode_ring(bp, h, st, cfg, pos)
+        else:
+            st = dict(st)
+            mix, conv, hs = rec_mix(bp, h, cfg, conv_state=st["conv"],
+                                    lru_state=st["h"], decode=True)
+            st["conv"], st["h"] = conv.astype(st["conv"].dtype), hs
+        x = x + mix
+        h = L.rms_norm(x, bp["ln_mlp"], cfg.norm_eps)
+        x = x + L.mlp(bp["mlp"], h, "gelu")
+        new_states.append(st)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"].astype(dt)).astype(jnp.float32)
+    return logits[:, 0], {"states": new_states, "len": pos + 1}
+
+
+def prefill(params, tokens, cfg, cache, **_):
+    """Prompt processing: parallel forms + state absorption."""
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        st = dict(cache["states"][i])
+        h = L.rms_norm(x, bp["ln_mix"], cfg.norm_eps)
+        if layer_kind(cfg, i) == "attn":
+            q, k, v = L.qkv_proj(bp["attn"], h, cfg, positions)
+            o = L.attention(q, k, v, causal=True, window=cfg.window)
+            mix = L.attn_out(bp["attn"], o, cfg)
+            win = st["k"].shape[1]
+            take = min(win, S)
+            # absorb the last `take` keys/values at their ring slots
+            pos_tail = jnp.arange(S - take, S, dtype=jnp.int32)
+            slots = pos_tail % win
+            st["k"] = st["k"].at[:, slots].set(k[:, -take:].astype(st["k"].dtype))
+            st["v"] = st["v"].at[:, slots].set(v[:, -take:].astype(st["v"].dtype))
+            st["pos"] = st["pos"].at[slots].set(pos_tail)
+        else:
+            xi = h @ bp["w_x"].astype(dt)
+            gate = jax.nn.gelu((h @ bp["w_gate"].astype(dt)).astype(jnp.float32),
+                               approximate=True).astype(dt)
+            xi, conv_state = causal_conv(bp, xi, None)
+            a, b = _lru_coeffs(bp, xi)
+
+            def combine(lhs, rhs):
+                return lhs[0] * rhs[0], rhs[0] * lhs[1] + rhs[1]
+            a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+            y = b_s.astype(dt)
+            st["conv"] = conv_state.astype(st["conv"].dtype)
+            st["h"] = b_s[:, -1]
+            mix = (y * gate) @ bp["w_y"].astype(dt)
+        x = x + mix
+        h = L.rms_norm(x, bp["ln_mlp"], cfg.norm_eps)
+        x = x + L.mlp(bp["mlp"], h, "gelu")
+        new_states.append(st)
+    xf = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (xf @ params["head"].astype(dt)).astype(jnp.float32)
+    return logits, {"states": new_states, "len": jnp.asarray(S, jnp.int32)}

@@ -1,0 +1,289 @@
+"""Shared model layers: norms, RoPE, GQA attention (naive / flash / decode),
+gated MLPs, embeddings. Functional style: params are dict pytrees.
+
+Dtype policy: parameters are stored in float32 (optimizer-friendly), all
+matmuls run in bfloat16 with float32 softmax/normalization accumulators —
+the standard TPU mixed-precision recipe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding (Megatron-style sequence parallelism between blocks)
+# ---------------------------------------------------------------------------
+# The launch layer installs a NamedSharding for the residual stream; block
+# boundaries constrain (B, S, D) activations to it (batch over DP axes,
+# sequence over `model`), which is what keeps the per-device live set of an
+# unrolled 48x4096-wide model inside HBM. No-op when unset (smoke tests).
+
+_ACT_SHARDING = None
+
+
+def set_activation_sharding(sharding) -> None:
+    global _ACT_SHARDING
+    _ACT_SHARDING = sharding
+
+
+def constrain_acts(x: jax.Array) -> jax.Array:
+    if _ACT_SHARDING is None or x.ndim != 3:
+        return x
+    spec = _ACT_SHARDING.spec
+    mesh_axes = dict(zip(_ACT_SHARDING.mesh.axis_names,
+                         _ACT_SHARDING.mesh.devices.shape))
+    def size_of(entry):
+        if entry is None:
+            return 1
+        if isinstance(entry, tuple):
+            n = 1
+            for a in entry:
+                n *= mesh_axes[a]
+            return n
+        return mesh_axes[entry]
+    for dim, entry in zip(x.shape, tuple(spec)):
+        if dim % size_of(entry):
+            return x
+    return jax.lax.with_sharding_constraint(x, _ACT_SHARDING)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float | None = None) -> jax.Array:
+    fan_in = shape[0]
+    # NB: keep the scale weak-typed — an np.float64 here silently promotes
+    # every parameter (and so every gradient) to f64 under x64.
+    scale = float(scale if scale is not None else 1.0 / np.sqrt(fan_in))
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def embed_init(key, vocab, d) -> jax.Array:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.01
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: (..., S) absolute indices."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _group(q: jax.Array, n_kv: int):
+    """(B,S,H,D) -> (B,S,KV,rep,D) exposing the GQA group structure."""
+    B, S, H, D = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, D)
+
+
+def attention_naive(q, k, v, *, causal=True, window=0, q_pos0=0, k_pos0=0):
+    """Reference attention. q (B,S,H,D); k,v (B,T,KV,D). f32 softmax."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    qg = _group(q, KV).astype(jnp.float32)
+    s = jnp.einsum("bsgrd,btgd->bgrst", qg, k.astype(jnp.float32))
+    s = s / float(np.sqrt(D))
+    qpos = q_pos0 + jnp.arange(S)
+    kpos = k_pos0 + jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def attention_flash(q, k, v, *, causal=True, window=0,
+                    q_chunk=512, k_chunk=512):
+    """Online-softmax chunked attention (no S x T materialization).
+
+    Memory per program: O(q_chunk * k_chunk) scores — this is what lets the
+    prefill_32k shapes compile within HBM. Requires S % q_chunk == 0 and
+    T % k_chunk == 0 (configs choose power-of-two chunks).
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, T)
+    # pad sequences up to chunk multiples (e.g. the VLM 576-token prefix
+    # makes S = 4672); padded kv positions are masked, padded q rows are
+    # sliced off after the scan
+    S0, T0 = S, T
+    pad_q = (-S) % q_chunk
+    pad_k = (-T) % k_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        S += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        T += pad_k
+    nq, nk = S // q_chunk, T // k_chunk
+    rep = H // KV
+    scale = float(1.0 / np.sqrt(D))
+
+    def one_q_chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qc = _group(qc, KV).astype(jnp.float32) * scale
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, kj * k_chunk, k_chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, kj * k_chunk, k_chunk, axis=1)
+            s = jnp.einsum("bsgrd,btgd->bgrst", qc, kc.astype(jnp.float32))
+            kpos = kj * k_chunk + jnp.arange(k_chunk)
+            mask = (kpos < T0)[None, :] * jnp.ones((q_chunk, 1), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrst,btgd->bgrsd", p, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, rep, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B,KV,rep,qc,D) -> (B,qc,H,D)
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, q_chunk, H, D)
+
+    chunks = jax.lax.map(one_q_chunk, jnp.arange(nq))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, D)
+    return out[:, :S0].astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, cache_len, *, window=0):
+    """Single new token vs. a (B, Smax, KV, D) cache. q: (B, 1, H, D)."""
+    B, _, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    qg = _group(q, KV).astype(jnp.float32)
+    s = jnp.einsum("bsgrd,btgd->bgrst", qg, k_cache.astype(jnp.float32))
+    s = s / float(np.sqrt(D))
+    kpos = jnp.arange(T)
+    mask = kpos < cache_len
+    if window:
+        mask &= kpos >= cache_len - window
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrst,btgd->bsgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, flash_threshold=2048):
+    """Dispatch: naive below the threshold, flash above."""
+    if q.shape[1] >= flash_threshold or k.shape[1] >= flash_threshold:
+        return attention_flash(q, k, v, causal=causal, window=window)
+    return attention_naive(q, k, v, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Attention block params / apply
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.q_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd)),
+        "wk": dense_init(ks[1], (d, KV * hd)),
+        "wv": dense_init(ks[2], (d, KV * hd)),
+        "wo": dense_init(ks[3], (H * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * hd,), jnp.float32)
+    return p
+
+
+def qkv_proj(p, x, cfg, positions):
+    """x (B,S,d) -> q (B,S,H,hd), k/v (B,S,KV,hd), RoPE applied."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.q_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv, hd)
+    v = v.reshape(B, S, cfg.n_kv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(p, o, cfg):
+    B, S, H, hd = o.shape
+    return o.reshape(B, S, H * hd) @ p["wo"].astype(o.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, ff) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff)),
+        "w_up": dense_init(ks[1], (d, ff)),
+        "w_down": dense_init(ks[2], (ff, d)),
+    }
+
+
+def mlp(p, x, act: str = "silu"):
+    dt = x.dtype
+    h = ACTS[act](x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)

@@ -1,0 +1,290 @@
+"""Model registry: unified API across families + sharding rules + input specs.
+
+``get_model(cfg)`` returns a namespace of pure functions; ``param_pspecs``
+derives the 2-D (FSDP x TP) PartitionSpec tree from leaf names;
+``input_specs``/``input_shardings`` build the ShapeDtypeStruct stand-ins for
+every (arch x shape) dry-run cell — weak-type-correct, shardable, and never
+allocating device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import transformer, encdec, xlstm, griffin
+from .config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Shapes assigned to the LM pool (seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def get_model(cfg: ModelConfig) -> types.SimpleNamespace:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        m = transformer
+    elif fam == "encdec":
+        m = encdec
+    elif fam == "xlstm":
+        m = xlstm
+    elif fam == "griffin":
+        m = griffin
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return types.SimpleNamespace(
+        init=m.init_params, forward=m.forward,
+        loss_fn=getattr(m, "loss_fn", None) or _generic_loss(m),
+        prefill=m.prefill, decode_step=m.decode_step,
+        init_cache=m.init_cache,
+    )
+
+
+def _generic_loss(m):
+    def loss_fn(params, batch, cfg, **kw):
+        logits = m.forward(params, batch["tokens"], cfg, **kw)
+        labels = batch["labels"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = (lse - ll) * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding: name-based rules, FSDP on `data`, TP on `model`
+# ---------------------------------------------------------------------------
+
+_RULES: dict[str, tuple] = {
+    # embeddings / head
+    "embed": ("model", None),
+    "head": ("data", "model"),
+    # attention / generic in->out projections
+    "wq": ("data", "model"), "wk": ("data", "model"), "wv": ("data", "model"),
+    "w_gate": ("data", "model"), "w_up": ("data", "model"),
+    "w_q": ("data", "model"), "w_k": ("data", "model"),
+    "w_v": ("data", "model"), "w_o": ("data", "model"),
+    "w_x": ("data", "model"), "w_rg": ("data", "model"),
+    "w_ig": ("data", "model"),
+    # out->residual projections
+    "wo": ("model", "data"), "w_down": ("model", "data"),
+    "w_y": ("model", "data"),
+    # MoE expert-stacked weights (E on model = expert parallelism)
+    "we_gate": ("model", "data", None), "we_up": ("model", "data", None),
+    "we_down": ("model", None, "data"),
+    "router": (None, None),
+    # biases / small vectors
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "lam": ("model",),
+    "conv": (None, "model"),
+    # xlstm specials
+    "w_i": ("data", None), "w_f": ("data", None),
+    "b_i": (None,), "b_f": (None,),
+    "r_z": (None, None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return str(p.key)
+    return ""
+
+
+def _divides(n: int | None, axis, mesh_shape: dict) -> bool:
+    if axis is None:
+        return True
+    if axis not in mesh_shape:      # axis absent from this mesh: replicate
+        return False
+    return n is not None and n % mesh_shape[axis] == 0
+
+
+def param_pspecs(cfg: ModelConfig, params, mesh_shape: dict | None = None):
+    """PartitionSpec tree mirroring ``params`` (shapes or arrays).
+
+    ``mesh_shape``: {'data': 16, 'model': 16}; any rule whose axis does not
+    divide the dim falls back to replication for that dim.
+    """
+    mesh_shape = mesh_shape or {"data": 16, "model": 16}
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        rule = _RULES.get(name)
+        if rule is None:
+            return P()
+        nd = len(shape)
+        rule = list(rule)
+        if nd == len(rule) + 1:      # scan-stacked leading layer dim
+            rule = [None] + rule
+        elif nd != len(rule):
+            return P()
+        out = []
+        for dim, axis in zip(shape, rule):
+            out.append(axis if _divides(dim, axis, mesh_shape) else None)
+        # drop trailing Nones for tidiness
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs) + shardings per (shape, kind)
+# ---------------------------------------------------------------------------
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def enc_len(cfg, seq: int) -> int:
+    return max(64, min(1024, seq // 4))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for one dry-run cell.
+
+    train  -> {"batch": {tokens, labels[, prefix_embeds | frames]}}
+    prefill-> {"tokens": ..., "cache": ...[, extras]}
+    decode -> {"token": ..., "cache": ...}
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    if sh["kind"] == "train":
+        batch = {"tokens": _sd((B, S), jnp.int32),
+                 "labels": _sd((B, S), jnp.int32)}
+        if cfg.frontend == "vision":
+            batch["prefix_embeds"] = _sd((B, cfg.n_prefix, cfg.d_model),
+                                         jnp.bfloat16)
+        if cfg.family == "encdec":
+            batch["frames"] = _sd((B, enc_len(cfg, S), cfg.d_model),
+                                  jnp.bfloat16)
+        return {"batch": batch}
+    if sh["kind"] == "prefill":
+        out = {"tokens": _sd((B, S), jnp.int32),
+               "cache": cache_specs(cfg, B, S)}
+        if cfg.frontend == "vision":
+            out["prefix_embeds"] = _sd((B, cfg.n_prefix, cfg.d_model),
+                                       jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = _sd((B, enc_len(cfg, S), cfg.d_model),
+                                jnp.bfloat16)
+        return out
+    # decode
+    cache = cache_specs(cfg, B, S, with_cross=cfg.family == "encdec")
+    return {"token": _sd((B,), jnp.int32), "cache": cache}
+
+
+def cache_specs(cfg: ModelConfig, B: int, S: int, with_cross: bool = False,
+                quantized: bool | None = None):
+    """ShapeDtypeStruct tree matching init_cache's output.
+
+    ``quantized`` (or env REPRO_KV_QUANT=1): int8 KV cache with per-head
+    scales (§Perf decode optimization)."""
+    import os as _os
+    if quantized is None:
+        quantized = _os.environ.get("REPRO_KV_QUANT") == "1"
+    if cfg.family in ("dense", "moe"):
+        # VLM: the prefix embeddings occupy cache slots too
+        S_tot = S + (cfg.n_prefix if cfg.frontend == "vision" else 0)
+        shape = (cfg.n_layers, B, S_tot, cfg.n_kv, cfg.hd)
+        if quantized:
+            sshape = (cfg.n_layers, B, S_tot, cfg.n_kv)
+            return {"k": _sd(shape, jnp.int8), "v": _sd(shape, jnp.int8),
+                    "k_scale": _sd(sshape, jnp.float32),
+                    "v_scale": _sd(sshape, jnp.float32),
+                    "len": _sd((), jnp.int32)}
+        return {"k": _sd(shape, jnp.bfloat16), "v": _sd(shape, jnp.bfloat16),
+                "len": _sd((), jnp.int32)}
+    if cfg.family == "encdec":
+        shape = (cfg.dec_layers, B, S, cfg.n_kv, cfg.hd)
+        out = {"k": _sd(shape, jnp.bfloat16), "v": _sd(shape, jnp.bfloat16),
+               "len": _sd((), jnp.int32)}
+        if with_cross:
+            T = enc_len(cfg, S)
+            cs = (cfg.dec_layers, B, T, cfg.n_kv, cfg.hd)
+            out["cross"] = {"ck": _sd(cs, jnp.bfloat16),
+                            "cv": _sd(cs, jnp.bfloat16)}
+        return out
+    if cfg.family == "xlstm":
+        di = int(cfg.proj_factor * cfg.d_model)
+        H = cfg.n_heads
+        hd = di // H
+        states = []
+        for i in range(cfg.n_layers):
+            if xlstm.is_slstm(cfg, i):
+                states.append({"c": _sd((B, H, hd), jnp.float32),
+                               "n": _sd((B, H, hd), jnp.float32),
+                               "m": _sd((B, H), jnp.float32),
+                               "h": _sd((B, H, hd), jnp.float32)})
+            else:
+                states.append({"C": _sd((B, H, hd, hd), jnp.float32),
+                               "n": _sd((B, H, hd), jnp.float32),
+                               "m": _sd((B, H), jnp.float32)})
+        return {"states": states, "len": _sd((), jnp.int32)}
+    if cfg.family == "griffin":
+        w = griffin.lru_width(cfg)
+        win = cfg.window or 2048
+        states = []
+        for i in range(cfg.n_layers):
+            if griffin.layer_kind(cfg, i) == "attn":
+                states.append({"k": _sd((B, win, cfg.n_kv, cfg.hd), jnp.bfloat16),
+                               "v": _sd((B, win, cfg.n_kv, cfg.hd), jnp.bfloat16),
+                               "pos": _sd((win,), jnp.int32)})
+            else:
+                states.append({"conv": _sd((B, cfg.conv_width - 1, w),
+                                           jnp.bfloat16),
+                               "h": _sd((B, w), jnp.float32)})
+        return {"states": states, "len": _sd((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+def input_shardings(cfg: ModelConfig, shape_name: str, specs,
+                    dp_axes=("data",), mesh_shape: dict | None = None):
+    """PartitionSpec tree matching :func:`input_specs` output.
+
+    Batch dims shard over ``dp_axes`` (('pod','data') multi-pod); decode KV
+    caches additionally shard their sequence dim over 'model' (sequence-
+    parallel KV — this is what fits the 32k cache in HBM).
+    """
+    mesh_shape = mesh_shape or {"data": 16, "model": 16}
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh_shape.get(a, 1)
+    dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def shard_batch(leaf_path, leaf):
+        shape = leaf.shape
+        name = _leaf_name(leaf_path)
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        # KV caches: (L, B, S, KV, hd) — batch on dp, seq on model
+        if name in ("k", "v", "ck", "cv") and nd == 5:
+            b_ok = shape[1] % dp == 0
+            s_ok = shape[2] % mesh_shape.get("model", 1) == 0
+            return P(None, dp_spec if b_ok else None,
+                     "model" if s_ok else None, None, None)
+        if name in ("k", "v") and nd == 4:   # griffin ring (B, win, KV, hd)
+            return P(dp_spec if shape[0] % dp == 0 else None)
+        if name == "pos":
+            return P()
+        # generic: shard dim 0 if it is the batch and divisible
+        if name in ("tokens", "labels", "token", "prefix_embeds", "frames",
+                    "C", "n", "m", "c", "h", "conv"):
+            return P(dp_spec if shape[0] % dp == 0 else None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(shard_batch, specs)

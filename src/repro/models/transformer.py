@@ -1,0 +1,269 @@
+"""Dense decoder-only transformer LM (also the VLM backbone).
+
+Supports: GQA + RoPE, optional QKV bias, SwiGLU MLP or MoE blocks (via
+models/moe.py), scan-over-layers (training; pairs with jax.checkpoint remat)
+or unrolled layers (dry-run mode: XLA cost_analysis counts while-bodies once,
+so the roofline path unrolls — DESIGN.md §5), KV-cache prefill/decode, and an
+optional prefix-embedding input for the VLM frontend stub.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import moe as moe_mod
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg) -> dict:
+    k_attn, k_mlp, k_moe = jax.random.split(key, 3)
+    p = {
+        "ln_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "ln_mlp": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": L.init_attn(k_attn, cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(k_moe, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k_mlp, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(cfg, key) -> dict:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": L.embed_init(k_emb, cfg.padded_vocab, cfg.d_model),
+        "layers": layers,
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def block(lp, x, cfg, positions):
+    h = L.rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    q, k, v = L.qkv_proj(lp["attn"], h, cfg, positions)
+    o = L.attention(q, k, v, causal=True, window=cfg.window)
+    x = x + L.attn_out(lp["attn"], o, cfg)
+    h = L.rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+    if cfg.family == "moe":
+        h = moe_mod.moe_block(lp["moe"], h, cfg)
+    else:
+        h = L.mlp(lp["mlp"], h, cfg.act)
+    return x + h
+
+
+def _run_layers(params, x, cfg, positions, use_scan, remat):
+    if use_scan:
+        def body(h, lp):
+            return L.constrain_acts(block(lp, h, cfg, positions)), None
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+
+    def one(lp, h):
+        return L.constrain_acts(block(lp, h, cfg, positions))
+
+    if remat:
+        one = jax.checkpoint(one)
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        x = one(lp, x)
+    return x
+
+
+def _logits(params, x, cfg):
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def forward(params, tokens, cfg, *, prefix_embeds=None, use_scan=True,
+            remat=True):
+    """tokens (B, S) [+ optional prefix (B, P, d_model)] -> logits.
+
+    With a prefix, logits are returned for the S token positions only.
+    """
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    P = 0
+    if prefix_embeds is not None:
+        P = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = _run_layers(params, x, cfg, positions, use_scan, remat)
+    if P:
+        x = x[:, P:]
+    return _logits(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg, **fwd_kwargs):
+    logits = forward(params, batch["tokens"], cfg,
+                     prefix_embeds=batch.get("prefix_embeds"), **fwd_kwargs)
+    labels = batch["labels"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache inference
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16,
+               quantized=False) -> dict:
+    """KV cache; ``quantized=True`` stores int8 K/V with per-(layer, batch,
+    kv-head) symmetric scales — the paper's Gamma quantization idea applied
+    to the decode memory bottleneck (2x HBM traffic cut; §Perf cell B)."""
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    if quantized:
+        sshape = (cfg.n_layers, batch, max_len, cfg.n_kv)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.full(sshape, 1e-6, jnp.float32),
+                "v_scale": jnp.full(sshape, 1e-6, jnp.float32),
+                "len": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def _kv_quantize(x):
+    """x (B,S,KV,hd) -> (int8, per-(B,S,KV) max-abs scale)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=3), 1e-6)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / s[..., None] * 127.0), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def _kv_dequantize(q, scale, dtype):
+    """q (B,S,KV,hd) int8, scale (B,S,KV) -> dtype."""
+    return (q.astype(jnp.float32)
+            * (scale[..., None] / 127.0)).astype(dtype)
+
+
+def prefill(params, tokens, cfg, cache, *, prefix_embeds=None,
+            use_scan=True):
+    """Fill the cache with the prompt; returns (last-token logits, cache)."""
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(h, lp):
+        hn = L.rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["attn"], hn, cfg, positions)
+        o = L.attention(q, k, v, causal=True, window=cfg.window)
+        h = h + L.attn_out(lp["attn"], o, cfg)
+        hn = L.rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+        if cfg.family == "moe":
+            hn = moe_mod.moe_block(lp["moe"], hn, cfg)
+        else:
+            hn = L.mlp(lp["mlp"], hn, cfg.act)
+        return h + hn, (k, v)
+
+    if use_scan:
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (k, v) = body(x, lp)
+            ks_l.append(k)
+            vs_l.append(v)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    return _logits(params, x[:, -1:], cfg), cache
+
+
+def decode_step(params, token, cache, cfg, *, use_scan=True):
+    """One decode step: token (B,) int32 -> (logits (B, V), new cache).
+
+    Handles both bf16 and int8-quantized caches (detected by the presence
+    of ``k_scale``)."""
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[token][:, None, :]          # (B,1,d)
+    pos = cache["len"]
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    quant = "k_scale" in cache
+
+    z0 = jnp.zeros((), jnp.int32)
+
+    def body(h, xs):
+        if quant:
+            lp, kc, vc, ks_s, vs_s = xs
+        else:
+            lp, kc, vc = xs
+            ks_s = vs_s = None
+        hn = L.rms_norm(h, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = L.qkv_proj(lp["attn"], hn, cfg, positions)
+        if quant:
+            kq, k_sc = _kv_quantize(k)
+            vq, v_sc = _kv_quantize(v)
+            kc = jax.lax.dynamic_update_slice(kc, kq, (z0, pos, z0, z0))
+            vc = jax.lax.dynamic_update_slice(vc, vq, (z0, pos, z0, z0))
+            ks_s = jax.lax.dynamic_update_slice(ks_s, k_sc, (z0, pos, z0))
+            vs_s = jax.lax.dynamic_update_slice(vs_s, v_sc, (z0, pos, z0))
+            k_full = _kv_dequantize(kc, ks_s, dt)
+            v_full = _kv_dequantize(vc, vs_s, dt)
+        else:
+            kc = jax.lax.dynamic_update_slice(
+                kc, k.astype(kc.dtype), (z0, pos, z0, z0))
+            vc = jax.lax.dynamic_update_slice(
+                vc, v.astype(vc.dtype), (z0, pos, z0, z0))
+            k_full, v_full = kc, vc
+        o = L.attention_decode(q, k_full, v_full, pos + 1, window=cfg.window)
+        h = h + L.attn_out(lp["attn"], o, cfg)
+        hn = L.rms_norm(h, lp["ln_mlp"], cfg.norm_eps)
+        if cfg.family == "moe":
+            hn = moe_mod.moe_block(lp["moe"], hn, cfg)
+        else:
+            hn = L.mlp(lp["mlp"], hn, cfg.act)
+        out = (kc, vc, ks_s, vs_s) if quant else (kc, vc)
+        return h + hn, out
+
+    xs_in = (params["layers"], cache["k"], cache["v"])
+    if quant:
+        xs_in = xs_in + (cache["k_scale"], cache["v_scale"])
+    if use_scan:
+        x, outs = jax.lax.scan(body, x, xs_in)
+    else:
+        outs_l = []
+        for i in range(cfg.n_layers):
+            xs_i = jax.tree.map(lambda a: a[i], xs_in)
+            x, out = body(x, xs_i)
+            outs_l.append(out)
+        outs = tuple(jnp.stack(z) for z in zip(*outs_l))
+    new_cache = {"k": outs[0], "v": outs[1], "len": cache["len"] + 1}
+    if quant:
+        new_cache["k_scale"] = outs[2]
+        new_cache["v_scale"] = outs[3]
+    return _logits(params, x, cfg)[:, 0], new_cache

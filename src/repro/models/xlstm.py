@@ -1,0 +1,293 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, true recurrence), alternating per config.
+
+mLSTM has two exact forms used here:
+  * parallel (training): decay-masked quadratic form with log-space
+    stabilization — attention-like, fully parallel over the sequence;
+  * recurrent (decode): O(1)-state update C_t = f C_{t-1} + i v k^T, which is
+    what makes the long_500k decode shape run with constant memory.
+Their equivalence is asserted in tests/test_models.py.
+
+sLSTM keeps per-head recurrent weights and is evaluated with lax.scan
+(sequential by construction — documented in the roofline notes since XLA's
+cost_analysis counts the scan body once).
+
+Block layout (simplified vs. the reference impl but structurally faithful):
+pre-LN -> up-projection (factor cfg.proj_factor, two branches) ->
+{m,s}LSTM core over heads -> SiLU-gated merge -> down-projection, residual.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+
+
+def _inner(cfg) -> int:
+    return int(cfg.proj_factor * cfg.d_model)
+
+
+def is_slstm(cfg, layer_idx: int) -> bool:
+    return cfg.slstm_every > 0 and (layer_idx % cfg.slstm_every
+                                    == cfg.slstm_every - 1)
+
+
+def init_block(key, cfg, layer_idx: int) -> dict:
+    d = cfg.d_model
+    di = _inner(cfg)
+    H = cfg.n_heads
+    hd = di // H
+    ks = jax.random.split(key, 10)
+    p = {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_up": L.dense_init(ks[0], (d, 2 * di)),
+        "w_down": L.dense_init(ks[1], (di, d)),
+        "w_q": L.dense_init(ks[2], (di, di)),
+        "w_k": L.dense_init(ks[3], (di, di)),
+        "w_v": L.dense_init(ks[4], (di, di)),
+        "w_i": L.dense_init(ks[5], (di, H), scale=0.02),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": L.dense_init(ks[6], (di, H), scale=0.02),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # forget-open init
+        "ln_inner": jnp.zeros((di,), jnp.float32),
+    }
+    if is_slstm(cfg, layer_idx):
+        p["r_z"] = jax.vmap(lambda k: L.dense_init(k, (hd, hd)))(
+            jax.random.split(ks[7], H))
+        p["w_o"] = L.dense_init(ks[8], (di, di))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core
+# ---------------------------------------------------------------------------
+
+def _gates(p, xi, H):
+    """log-space input/forget gates: (B,S,H)."""
+    x32 = xi.astype(jnp.float32)
+    li = x32 @ p["w_i"].astype(jnp.float32) + p["b_i"]          # log i
+    lf = jax.nn.log_sigmoid(x32 @ p["w_f"].astype(jnp.float32) + p["b_f"])
+    return li, lf
+
+
+def mlstm_parallel(p, xi, cfg):
+    """Stabilized decay-masked quadratic form. xi: (B,S,di)."""
+    B, S, di = xi.shape
+    H = cfg.n_heads
+    hd = di // H
+    dt = xi.dtype
+    q = (xi @ p["w_q"].astype(dt)).reshape(B, S, H, hd)
+    k = (xi @ p["w_k"].astype(dt)).reshape(B, S, H, hd) / float(np.sqrt(hd))
+    v = (xi @ p["w_v"].astype(dt)).reshape(B, S, H, hd)
+    li, lf = _gates(p, xi, H)                                   # (B,S,H)
+    F = jnp.cumsum(lf, axis=1)                                  # log prod f
+    # log decay D[t,s] = F_t - F_s + li_s  (s <= t)
+    logD = (F[:, :, None, :] - F[:, None, :, :]
+            + li[:, None, :, :])                                # (B,T,S,H)
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    logD = jnp.where(tri[None, :, :, None], logD, -jnp.inf)
+    m = jnp.max(logD, axis=2, keepdims=True)                    # (B,T,1,H)
+    D = jnp.exp(logD - m)                                       # stabilized
+    qk = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                    k.astype(jnp.float32))
+    Ct = qk * D
+    norm = jnp.maximum(jnp.abs(jnp.sum(Ct, axis=2)),
+                       jnp.exp(-m[:, :, 0, :]))                 # (B,T,H)
+    h = jnp.einsum("btsh,bshd->bthd", Ct, v.astype(jnp.float32))
+    h = h / norm[..., None]
+    return h.reshape(B, S, di).astype(dt)
+
+
+def mlstm_decode(p, xi, state, cfg):
+    """One-step recurrent form. xi: (B,1,di); state: dict(C,n,m)."""
+    B, _, di = xi.shape
+    H = cfg.n_heads
+    hd = di // H
+    dt = xi.dtype
+    q = (xi @ p["w_q"].astype(dt)).reshape(B, H, hd).astype(jnp.float32)
+    k = ((xi @ p["w_k"].astype(dt)).reshape(B, H, hd)
+         / float(np.sqrt(hd))).astype(jnp.float32)
+    v = (xi @ p["w_v"].astype(dt)).reshape(B, H, hd).astype(jnp.float32)
+    li, lf = _gates(p, xi, H)
+    li, lf = li[:, 0], lf[:, 0]                                  # (B,H)
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m = jnp.maximum(lf + m_prev, li)
+    f = jnp.exp(lf + m_prev - m)
+    i = jnp.exp(li - m)
+    C = f[..., None, None] * C_prev + i[..., None, None] * (
+        v[..., :, None] * k[..., None, :])                       # (B,H,hd,hd)
+    n = f[..., None] * n_prev + i[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), jnp.exp(-m))
+    h = num / den[..., None]
+    return (h.reshape(B, 1, di).astype(dt),
+            {"C": C, "n": n, "m": m})
+
+
+def mlstm_init_state(cfg, batch):
+    di = _inner(cfg)
+    H = cfg.n_heads
+    hd = di // H
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM core (sequential scan; recurrent weights per head)
+# ---------------------------------------------------------------------------
+
+def slstm_scan(p, xi, cfg, state=None):
+    """xi (B,S,di) -> (B,S,di); optionally continue from ``state``."""
+    B, S, di = xi.shape
+    H = cfg.n_heads
+    hd = di // H
+    z_in = (xi @ p["w_v"].astype(xi.dtype)).reshape(B, S, H, hd)
+    o_in = (xi @ p["w_o"].astype(xi.dtype)).reshape(B, S, H, hd)
+    li, lf = _gates(p, xi, H)
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    rz = p["r_z"].astype(jnp.float32)
+
+    def step(carry, ins):
+        c, n, m, h_prev = carry
+        z_t, o_t, li_t, lf_t = ins
+        z = jnp.tanh(z_t.astype(jnp.float32)
+                     + jnp.einsum("bhi,hij->bhj", h_prev, rz))
+        m_new = jnp.maximum(lf_t + m, li_t)
+        f = jnp.exp(lf_t + m - m_new)
+        i = jnp.exp(li_t - m_new)
+        c = f[..., None] * c + i[..., None] * z
+        n = f[..., None] * n + i[..., None]
+        h = jax.nn.sigmoid(o_t.astype(jnp.float32)) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    xs = (jnp.moveaxis(z_in, 1, 0), jnp.moveaxis(o_in, 1, 0),
+          jnp.moveaxis(li, 1, 0), jnp.moveaxis(lf, 1, 0))
+    carry0 = (state["c"], state["n"], state["m"], state["h"])
+    carry, hs = jax.lax.scan(step, carry0, xs)
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(xi.dtype)
+    new_state = {"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+    return out, new_state
+
+
+def slstm_init_state(cfg, batch):
+    di = _inner(cfg)
+    H = cfg.n_heads
+    hd = di // H
+    return {"c": jnp.zeros((batch, H, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, H, hd), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Full blocks / model
+# ---------------------------------------------------------------------------
+
+def block_forward(p, x, cfg, layer_idx):
+    """Training/prefill form."""
+    dt = x.dtype
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_up"].astype(dt)
+    xi, z = jnp.split(up, 2, axis=-1)
+    if is_slstm(cfg, layer_idx):
+        core, _ = slstm_scan(p, xi, cfg)
+    else:
+        core = mlstm_parallel(p, xi, cfg)
+    core = L.rms_norm(core, p["ln_inner"], cfg.norm_eps)
+    out = (core * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return x + out
+
+
+def block_decode(p, x, state, cfg, layer_idx):
+    dt = x.dtype
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["w_up"].astype(dt)
+    xi, z = jnp.split(up, 2, axis=-1)
+    if is_slstm(cfg, layer_idx):
+        core, state = slstm_scan(p, xi, cfg, state=state)
+    else:
+        core, state = mlstm_decode(p, xi, state, cfg)
+    core = L.rms_norm(core, p["ln_inner"], cfg.norm_eps)
+    out = (core * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return x + out, state
+
+
+def init_params(cfg, key) -> dict:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    return {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model),
+        "blocks": [init_block(ks[1 + i], cfg, i) for i in range(cfg.n_layers)],
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": L.dense_init(ks[-1], (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def forward(params, tokens, cfg, *, remat=False, **_):
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    for i, bp in enumerate(params["blocks"]):
+        def fn(bp_, x_, _i=i):
+            return block_forward(bp_, x_, cfg, _i)
+        if remat:
+            fn = jax.checkpoint(fn)
+        x = L.constrain_acts(fn(bp, x))
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return (x @ params["head"].astype(dt)).astype(jnp.float32)
+
+
+def init_cache(cfg, batch, max_len=0, dtype=jnp.bfloat16):
+    """Recurrent state per block — O(1) in sequence length."""
+    states = []
+    for i in range(cfg.n_layers):
+        states.append(slstm_init_state(cfg, batch) if is_slstm(cfg, i)
+                      else mlstm_init_state(cfg, batch))
+    return {"states": states, "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, tokens, cfg, cache, **_):
+    """Sequential state build-up via the recurrent forms (exact)."""
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    states = list(cache["states"])
+    # run blocks in parallel form, then absorb the sequence into states by
+    # replaying the recurrent form once per block (small S for smoke; for
+    # long prompts serving uses chunked replay)
+    B, S = tokens.shape
+    h = x
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        hn = L.rms_norm(h, bp["ln"], cfg.norm_eps)
+        up = hn @ bp["w_up"].astype(dt)
+        xi, z = jnp.split(up, 2, axis=-1)
+        if is_slstm(cfg, i):
+            core, st = slstm_scan(bp, xi, cfg, state=states[i])
+        else:
+            def mstep(st, xi_t):
+                c, st2 = mlstm_decode(bp, xi_t[:, None, :], st, cfg)
+                return st2, c[:, 0]
+            st, cores = jax.lax.scan(mstep, states[i],
+                                     jnp.moveaxis(xi, 1, 0))
+            core = jnp.moveaxis(cores, 0, 1)
+        core = L.rms_norm(core, bp["ln_inner"], cfg.norm_eps)
+        h = h + (core * jax.nn.silu(z)) @ bp["w_down"].astype(dt)
+        new_states.append(st)
+    hf = L.rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (hf @ params["head"].astype(dt)).astype(jnp.float32)
+    return logits, {"states": new_states, "len": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params, token, cache, cfg, **_):
+    dt = L.cdtype(cfg)
+    x = params["embed"].astype(dt)[token][:, None, :]
+    states = list(cache["states"])
+    new_states = []
+    for i, bp in enumerate(params["blocks"]):
+        x, st = block_decode(bp, x, states[i], cfg, i)
+        new_states.append(st)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = (x @ params["head"].astype(dt)).astype(jnp.float32)
+    return logits[:, 0], {"states": new_states, "len": cache["len"] + 1}

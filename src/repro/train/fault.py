@@ -1,0 +1,58 @@
+"""Fault-tolerance drills: node failure -> checkpoint restore on a resized
+mesh (elastic rescale), plus the straggler policy knobs shared with the ADMM
+protocol layer.
+
+On a real cluster the coordinator detects a missing host, reforms the mesh
+with the survivors and every worker calls ``elastic_restore`` — all host-side
+logic that is identical in this CPU harness, which is why the drill below is
+a faithful test of the recovery path (only the device transport differs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import checkpoint as ckpt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    """Deadline-based partial aggregation (used by core/protocol.py)."""
+    deadline_s: float = 1.0
+    max_stale_rounds: int = 3
+
+
+def shardings_for(mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+
+
+def elastic_restore(ckpt_dir: str, like, mesh, pspecs, step=None):
+    """Restore a checkpoint onto ``mesh`` (any size whose axes divide dims).
+
+    ``like``: structure (ShapeDtypeStructs ok); ``pspecs``: PartitionSpec
+    tree. Returns (state, manifest).
+    """
+    sh = shardings_for(mesh, pspecs)
+    return ckpt_mod.restore(ckpt_dir, like, step=step, shardings=sh)
+
+
+def drill_fail_and_rescale(train_step, state, batches, ckpt_dir,
+                           mesh_small, pspecs, fail_after: int = 2):
+    """Simulated failure drill used by tests:
+
+    1. run ``fail_after`` steps, checkpointing each;
+    2. "lose" devices: rebuild state on ``mesh_small`` from the last
+       checkpoint (elastic restore);
+    3. continue training; return the loss trace across the failure.
+    """
+    losses = []
+    for i, batch in enumerate(batches):
+        if i == fail_after:
+            state, _ = elastic_restore(ckpt_dir, jax.eval_shape(lambda: state),
+                                       mesh_small, pspecs)
+        state, metrics = train_step(state, batch)
+        losses.append(float(metrics["loss"]))
+        ckpt_mod.save(ckpt_dir, int(state["step"]), state)
+    return state, losses

@@ -1,0 +1,33 @@
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_subprocess(code: str, devices: int = 4, timeout: int = 600):
+    """Run ``code`` in a fresh interpreter with N host platform devices.
+
+    Tests that need a multi-device mesh use this so the main test process
+    keeps the default single-device view (the dry-run is the only entry
+    point allowed to pin 512 devices).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=REPO)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={r.returncode})\n--- stdout\n"
+            f"{r.stdout}\n--- stderr\n{r.stderr[-4000:]}")
+    return r.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

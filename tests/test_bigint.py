@@ -1,0 +1,81 @@
+"""Property tests: limb arithmetic vs Python big ints (the ground truth)."""
+import random
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bigint as bi
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def limbs(x, L):
+    return jnp.asarray(bi.from_int(x, L))[None, :]
+
+
+@given(st.integers(0, 2**96 - 1), st.integers(0, 2**96 - 1))
+def test_add_matches_python(a, b):
+    L = 8
+    out = bi.to_int(bi.add(limbs(a, L), limbs(b, L))[0])
+    assert out == (a + b) % (1 << (16 * L))
+
+
+@given(st.integers(0, 2**96 - 1), st.integers(0, 2**96 - 1))
+def test_sub_wraps_like_python(a, b):
+    L = 8
+    out = bi.to_int(bi.sub(limbs(a, L), limbs(b, L))[0])
+    assert out == (a - b) % (1 << (16 * L))
+
+
+@given(st.integers(0, 2**80 - 1), st.integers(0, 2**80 - 1))
+def test_mul_exact(a, b):
+    L = 5
+    out = bi.to_int(bi.mul(limbs(a, L), limbs(b, L))[0])
+    assert out == a * b
+
+
+@given(st.integers(0, 2**96 - 1), st.integers(0, 2**96 - 1))
+def test_compare(a, b):
+    L = 8
+    c = int(bi.compare(limbs(a, L), limbs(b, L))[0])
+    assert c == (a > b) - (a < b)
+
+
+@given(st.data())
+def test_mulmod_modexp_vs_python(data):
+    bits = data.draw(st.sampled_from([32, 48, 64, 80]))
+    m = data.draw(st.integers(1 << (bits - 1), (1 << bits) - 1)) | 1
+    L = bi.n_limbs_for(m)
+    a = data.draw(st.integers(0, m - 1))
+    b = data.draw(st.integers(0, m - 1))
+    e = data.draw(st.integers(0, 2**32 - 1))
+    mu = jnp.asarray(bi.barrett_mu(m, L))
+    ml = jnp.asarray(bi.from_int(m, L))
+    got = bi.to_int(bi.mulmod(limbs(a, L), limbs(b, L), ml, mu)[0])
+    assert got == (a * b) % m
+    got_e = bi.to_int(bi.modexp(limbs(a, L),
+                                jnp.asarray(bi.from_int(e, 2))[None, :],
+                                ml, mu)[0])
+    assert got_e == pow(a, e, m)
+
+
+def test_batched_consistency():
+    rng = random.Random(0)
+    m = rng.getrandbits(64) | (1 << 63) | 1
+    L = bi.n_limbs_for(m)
+    xs = [rng.randrange(m) for _ in range(32)]
+    ys = [rng.randrange(m) for _ in range(32)]
+    mu = jnp.asarray(bi.barrett_mu(m, L))
+    ml = jnp.asarray(bi.from_int(m, L))
+    got = bi.to_ints(bi.mulmod(jnp.asarray(bi.from_ints(xs, L)),
+                               jnp.asarray(bi.from_ints(ys, L)), ml, mu))
+    assert got == [(x * y) % m for x, y in zip(xs, ys)]
+
+
+def test_from_int_range_checks():
+    with pytest.raises(ValueError):
+        bi.from_int(-1, 4)
+    with pytest.raises(ValueError):
+        bi.from_int(1 << 64, 4)

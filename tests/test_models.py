@@ -1,0 +1,184 @@
+"""Per-arch smoke tests: reduced config forward/train-step on CPU, shape and
+NaN assertions, prefill/decode vs full-forward parity, mLSTM form
+equivalence, MoE dispatch properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.models import registry, xlstm as xlstm_mod, layers as L
+from repro.models import moe as moe_mod
+from repro.train import loop as loop_mod
+from repro.train.optimizer import OptConfig
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg):
+    rng = np.random.default_rng(0)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend == "vision":
+        b["prefix_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.n_prefix, cfg.d_model)), jnp.bfloat16)
+    if cfg.family == "encdec":
+        b["frames"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, 8, cfg.d_model)), jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = get_reduced(arch)
+    m = registry.get_model(cfg)
+    params = m.init(cfg, KEY)
+    batch = _batch(cfg)
+    if cfg.family == "encdec":
+        logits = m.forward(params, batch["tokens"], cfg,
+                           frames=batch["frames"], use_scan=False)
+    elif cfg.frontend == "vision":
+        logits = m.forward(params, batch["tokens"], cfg,
+                           prefix_embeds=batch["prefix_embeds"],
+                           use_scan=False)
+    else:
+        logits = m.forward(params, batch["tokens"], cfg)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_decreases_loss(arch):
+    cfg = get_reduced(arch)
+    step = loop_mod.make_train_step(cfg, OptConfig(lr=5e-3, warmup_steps=1,
+                                                   total_steps=20),
+                                    use_scan=False, remat=False)
+    state = loop_mod.init_train_state(cfg, KEY)
+    batch = _batch(cfg)
+    jitted = jax.jit(step)
+    losses = []
+    for _ in range(8):
+        state, metrics = jitted(state, batch)
+        losses.append(float(metrics["loss"]))
+        assert not np.isnan(losses[-1])
+    assert losses[-1] < losses[0], losses   # overfits one batch
+
+
+@pytest.mark.parametrize("arch", ["yi_9b", "qwen2_moe_a27b",
+                                  "seamless_m4t_medium", "xlstm_125m",
+                                  "recurrentgemma_2b"])
+def test_prefill_decode_parity(arch):
+    cfg = get_reduced(arch)
+    m = registry.get_model(cfg)
+    params = m.init(cfg, KEY)
+    batch = _batch(cfg)
+    tokens = batch["tokens"]
+    kw = {"frames": batch["frames"]} if cfg.family == "encdec" else {}
+    if cfg.family == "encdec":
+        full = m.forward(params, tokens, cfg, use_scan=False, **kw)
+    else:
+        full = m.forward(params, tokens, cfg)
+    cache = m.init_cache(cfg, B, S + 4)
+    lg, cache = m.prefill(params, tokens, cfg, cache, **kw)
+    assert float(jnp.max(jnp.abs(lg.reshape(B, -1) - full[:, -1]))) < 0.15
+    nxt = jnp.argmax(full[:, -1], -1).astype(jnp.int32)
+    lg2, _ = m.decode_step(params, nxt, cache, cfg)
+    ext = jnp.concatenate([tokens, nxt[:, None]], 1)
+    if cfg.family == "encdec":
+        full2 = m.forward(params, ext, cfg, use_scan=False, **kw)
+    else:
+        full2 = m.forward(params, ext, cfg)
+    assert float(jnp.max(jnp.abs(lg2 - full2[:, -1]))) < 0.15
+
+
+def test_mlstm_parallel_equals_recurrent():
+    """The two mLSTM forms must agree (training vs decode path)."""
+    cfg = get_reduced("xlstm_125m")
+    bp = xlstm_mod.init_block(KEY, cfg, 0)    # layer 0 = mLSTM
+    rng = np.random.default_rng(0)
+    di = int(cfg.proj_factor * cfg.d_model)
+    xi = jnp.asarray(rng.normal(0, 0.5, (2, 10, di)), jnp.float32)
+    par = xlstm_mod.mlstm_parallel(bp, xi, cfg)
+    st = xlstm_mod.mlstm_init_state(cfg, 2)
+    outs = []
+    for t in range(10):
+        o, st = xlstm_mod.mlstm_decode(bp, xi[:, t:t + 1], st, cfg)
+        outs.append(o)
+    rec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(par - rec)))
+    assert err < 1e-4, err
+
+
+def test_flash_attention_matches_naive():
+    rng = np.random.default_rng(1)
+    Bq, Sq, H, D, KV = 2, 256, 4, 32, 2
+    q = jnp.asarray(rng.normal(0, 1, (Bq, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (Bq, Sq, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (Bq, Sq, KV, D)), jnp.float32)
+    naive = L.attention_naive(q, k, v, causal=True)
+    flash = L.attention_flash(q, k, v, causal=True, q_chunk=64, k_chunk=64)
+    assert float(jnp.max(jnp.abs(naive - flash))) < 1e-4
+    # windowed variant
+    naive_w = L.attention_naive(q, k, v, causal=True, window=32)
+    flash_w = L.attention_flash(q, k, v, causal=True, window=32,
+                                q_chunk=64, k_chunk=64)
+    assert float(jnp.max(jnp.abs(naive_w - flash_w))) < 1e-4
+
+
+def test_moe_capacity_and_router():
+    cfg = get_reduced("qwen2_moe_a27b")
+    p = moe_mod.init_moe(KEY, cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 8, cfg.d_model)),
+                    jnp.float32)
+    out = moe_mod.moe_block(p, x, cfg)
+    assert out.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(out)))
+    # capacity respects alignment
+    assert moe_mod.capacity(cfg, 1024) % 8 == 0
+
+
+def test_param_pspecs_divisibility():
+    """Every sharded dim divides the production mesh axes (full configs)."""
+    mesh_shape = {"data": 16, "model": 16}
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        m = registry.get_model(cfg)
+        shapes = jax.eval_shape(lambda c=cfg, mm=m: mm.init(c, KEY))
+        specs = registry.param_pspecs(cfg, shapes, mesh_shape)
+
+        def check(leaf, spec):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is not None:
+                    assert dim % mesh_shape[ax] == 0, (arch, leaf.shape, spec)
+        jax.tree.map(check, shapes, specs,
+                     is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def test_rope_rotation_invariant():
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (1, 4, 2, 8)),
+                    jnp.float32)
+    pos = jnp.arange(4)[None]
+    out = L.rope(x, pos, 10_000.0)
+    # norm preserved per head position
+    n_in = jnp.linalg.norm(x, axis=-1)
+    n_out = jnp.linalg.norm(out, axis=-1)
+    assert float(jnp.max(jnp.abs(n_in - n_out))) < 1e-4
+
+
+def test_int8_kv_cache_decode_parity():
+    """int8 KV cache (Gamma-style per-position scales) tracks bf16 decode."""
+    from repro.models import transformer as T
+    cfg = get_reduced("yi_9b")
+    m = registry.get_model(cfg)
+    params = m.init(cfg, KEY)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 12), 0, cfg.vocab)
+    cache = m.init_cache(cfg, B, 18)
+    lg, cache = m.prefill(params, tokens, cfg, cache)
+    nxt = jnp.argmax(lg.reshape(B, -1), -1).astype(jnp.int32)
+    lg_bf16, _ = m.decode_step(params, nxt, cache, cfg)
+    qc = T.init_cache(cfg, B, 18, quantized=True)
+    for t in range(12):
+        _, qc = m.decode_step(params, tokens[:, t], qc, cfg)
+    lg_q, _ = m.decode_step(params, nxt, qc, cfg)
+    assert float(jnp.max(jnp.abs(lg_q - lg_bf16))) < 0.25

@@ -1,0 +1,106 @@
+"""Paillier: gold path, CRT decomposition, batched limb path equivalence."""
+import random
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bigint as bi
+from repro.core import paillier as gold
+from repro.core import paillier_vec as pv
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+KEY = gold.keygen(128, random.Random(1234))
+VK = pv.make_vec_key(KEY)
+
+
+def test_keygen_structure():
+    assert KEY.n == KEY.p * KEY.q
+    assert KEY.n2 == KEY.n ** 2
+    assert (KEY.p2_inv_q2 * KEY.p2) % KEY.q2 == 1
+
+
+@given(st.integers(0, 2**62 - 1), st.integers(0, 2**62 - 1))
+def test_homomorphic_add(m1, m2):
+    rng = random.Random(m1 ^ m2)
+    c1 = gold.encrypt(KEY, m1, gold.rand_r(KEY, rng))
+    c2 = gold.encrypt_crt(KEY, m2, gold.rand_r(KEY, rng))
+    assert gold.decrypt(KEY, gold.c_add(KEY, c1, c2)) == (m1 + m2) % KEY.n
+    assert gold.decrypt_crt(KEY, c1) == m1
+
+
+@given(st.integers(0, 2**40 - 1), st.integers(0, 2**20 - 1))
+def test_homomorphic_mul_const(m, k):
+    rng = random.Random(m ^ k)
+    c = gold.encrypt(KEY, m, gold.rand_r(KEY, rng))
+    assert gold.decrypt(KEY, gold.c_mul_const(KEY, c, k)) == (m * k) % KEY.n
+    assert gold.decrypt(KEY, gold.c_mul_const_crt(KEY, c, k)) \
+        == (m * k) % KEY.n
+
+
+def test_crt_modexp_equals_direct():
+    rng = random.Random(0)
+    for _ in range(10):
+        base = rng.randrange(1, KEY.n2)
+        e = rng.randrange(1, KEY.lam)
+        assert gold.modexp_crt(KEY, base, e) == pow(base, e, KEY.n2)
+
+
+def test_vec_encrypt_decrypt_matches_gold():
+    rng = random.Random(7)
+    ms = [rng.randrange(2**50) for _ in range(8)]
+    pool = gold.make_r_pool(KEY, len(ms), rng)
+    rn = jnp.asarray(bi.from_ints(pool, VK.pack_n2.L16))
+    c = pv.encrypt_batch(VK, jnp.asarray(ms, jnp.int64), rn)
+    c_ints = bi.to_ints(c)
+    for m, ci, rni in zip(ms, c_ints, pool):
+        assert ci == ((1 + m * KEY.n) * rni) % KEY.n2
+        assert gold.decrypt(KEY, ci) == m
+    dec = list(np.asarray(pv.decrypt_batch(VK, c)))
+    assert dec == ms
+
+
+def test_vec_homomorphic_ops():
+    rng = random.Random(8)
+    ms = [rng.randrange(10**6) for _ in range(4)]
+    pool = gold.make_r_pool(KEY, len(ms), rng)
+    rn = jnp.asarray(bi.from_ints(pool, VK.pack_n2.L16))
+    c = pv.encrypt_batch(VK, jnp.asarray(ms, jnp.int64), rn)
+    two = pv.c_add_batch(VK, c, c)
+    for m, ci in zip(ms, bi.to_ints(two)):
+        assert gold.decrypt(KEY, ci) == 2 * m
+    k = jnp.asarray([5, 7, 11, 13], jnp.int64)
+    mulc = pv.c_mul_const_batch(VK, c, k)
+    for m, ki, ci in zip(ms, [5, 7, 11, 13], bi.to_ints(mulc)):
+        assert gold.decrypt(KEY, ci) == (m * ki) % KEY.n
+
+
+def test_vec_matvec():
+    rng = random.Random(9)
+    N, M = 5, 3
+    ms = [rng.randrange(1000) for _ in range(N)]
+    pool = gold.make_r_pool(KEY, N, rng)
+    rn = jnp.asarray(bi.from_ints(pool, VK.pack_n2.L16))
+    cvec = pv.encrypt_batch(VK, jnp.asarray(ms, jnp.int64), rn)
+    Km = np.random.default_rng(0).integers(0, 99, (M, N))
+    out = bi.to_ints(pv.c_matvec(VK, jnp.asarray(Km, jnp.int64), cvec))
+    for i in range(M):
+        assert gold.decrypt(KEY, out[i]) \
+            == int(sum(Km[i, j] * ms[j] for j in range(N))) % KEY.n
+
+
+def test_semantic_randomization():
+    """Same plaintext, fresh r -> different ciphertexts (IND-CPA shape)."""
+    rng = random.Random(10)
+    c1 = gold.encrypt(KEY, 42, gold.rand_r(KEY, rng))
+    c2 = gold.encrypt(KEY, 42, gold.rand_r(KEY, rng))
+    assert c1 != c2
+    assert gold.decrypt(KEY, c1) == gold.decrypt(KEY, c2) == 42
+
+
+def test_plaintext_range_check():
+    with pytest.raises(ValueError):
+        gold.encrypt(KEY, KEY.n, 3)

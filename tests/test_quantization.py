@@ -1,0 +1,72 @@
+"""Quantization Gamma_1/Gamma_2 + Theorem-1 dequantization properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as qz
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+SPEC = qz.QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+
+
+@given(st.lists(st.floats(-7.9, 7.9), min_size=1, max_size=32))
+def test_gamma2_roundtrip_bound(vals):
+    u = np.array(vals)
+    q = np.asarray(qz.gamma2(u, SPEC))
+    assert (q >= 0).all() and (q <= SPEC.delta).all()
+    back = np.asarray(qz.inv_gamma2(q, SPEC))
+    assert np.max(np.abs(back - u)) <= 0.5 * SPEC.span / SPEC.delta + 1e-12
+
+
+@given(st.lists(st.floats(-7.9, 7.9), min_size=1, max_size=32))
+def test_gamma1_roundtrip_bound(vals):
+    u = np.array(vals)
+    q = np.asarray(qz.gamma1(u, SPEC))
+    assert (q >= 0).all()
+    back = np.asarray(qz.inv_gamma1(q, SPEC))
+    assert np.max(np.abs(back - u)) <= 0.5 * SPEC.span ** 2 / SPEC.delta ** 2 + 1e-12
+
+
+@given(st.integers(0, 10_000))
+def test_theorem1_chain_dequantizes(seed):
+    rng = np.random.default_rng(seed)
+    N = int(rng.integers(2, 24))
+    u1 = rng.uniform(-3, 3, N)
+    u2 = rng.uniform(-3, 3, N)
+    u3 = rng.uniform(-3, 3, N)
+    B = rng.uniform(-2, 2, (N, N))
+    R = np.asarray(qz.chain(u3, B, u1, u2, SPEC))
+    rec = np.asarray(qz.dequantize_theorem1(
+        R, B @ np.ones(N), float(np.sum(u1 + u2)), N, SPEC))
+    true = u3 + B @ (u1 + u2)
+    # error bound ~ 2 N s^2 / Delta (rounding accumulation, DESIGN.md)
+    bound = 2.0 * N * SPEC.span ** 2 / SPEC.delta
+    assert np.max(np.abs(rec - true)) < bound
+
+
+def test_paper_loss_scaling_law():
+    """Fig. 5: precision loss ~ 1/(10 Delta)."""
+    rng = np.random.default_rng(0)
+    u = rng.uniform(-7, 7, 64)
+    for delta in (1e5, 1e6, 1e7):
+        spec = qz.QuantSpec(delta=delta, zmin=-8, zmax=8)
+        back = np.asarray(qz.inv_gamma2(np.asarray(qz.gamma2(u, spec)), spec))
+        loss = np.mean(np.abs(back - u))
+        assert loss < 10.0 / delta, (delta, loss)
+
+
+def test_int64_guard():
+    assert qz.QuantSpec(delta=1e6).int64_safe(1000)
+    assert not qz.QuantSpec(delta=1e12).int64_safe(1000)
+    assert qz.QuantSpec(delta=1e6).plaintext_bits(1000) < 64
+
+
+def test_tensor_quantization_roundtrip():
+    rng = np.random.default_rng(1)
+    g = rng.normal(0, 0.1, (16, 8))
+    q, tmin, tmax = qz.quantize_tensor(g, SPEC)
+    back = np.asarray(qz.dequantize_tensor(q, tmin, tmax, SPEC))
+    span = float(tmax - tmin)
+    assert np.max(np.abs(back - g)) <= 0.5 * span / SPEC.delta + 1e-12
