@@ -1,0 +1,90 @@
+"""Topology x node-count sweep on the edge-network runtime.
+
+For each {star, ring, hierarchical} x K in {4, 8, 16, 32} configuration,
+runs the protocol (plain backend — the bit-exact functional simulation,
+so the sweep is fast at K=32) on the simulated network and records
+
+  * iterations until the iterate reaches the MSE target (1.05x the final
+    MSE of that K's own converged run — convergence depends on K, not on
+    the topology, so the target is shared across topologies at each K), and
+  * the simulated wall-clock at that iteration (virtual seconds charged
+    by the link models and the per-op cost model — this is where star /
+    ring / hierarchical actually differ).
+
+Emits ``BENCH_topology.json`` plus the harness' CSV rows.  Run directly::
+
+  PYTHONPATH=src python benchmarks/bench_topology.py
+
+or via ``python -m benchmarks.run --only topo``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core import protocol
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import make_lasso
+from repro.runtime import LinkModel, topology as topo_mod
+from repro.runtime.runner import run_on_runtime
+try:
+    from .common import emit
+except ImportError:          # direct script run: python benchmarks/bench_topology.py
+    from common import emit
+
+TOPOLOGIES = ("star", "ring", "hierarchical")
+EDGE_COUNTS = (4, 8, 16, 32)
+M, N = 48, 64            # N divisible by every K in the sweep
+ITERS = 60
+SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+LINK = LinkModel(bytes_per_s=125e6, latency_s=1e-3)
+OUT = "BENCH_topology.json"
+
+
+def _mse_curve(history: np.ndarray, x_true: np.ndarray) -> np.ndarray:
+    return np.mean((history - x_true[None, :]) ** 2, axis=1)
+
+
+def run(rows: list) -> None:
+    inst = make_lasso(M, N, sparsity=0.1, noise=0.01, seed=3)
+    results = []
+    targets = {}
+    for K in EDGE_COUNTS:
+        cfg = protocol.ProtocolConfig(K=K, lam=0.05, iters=ITERS,
+                                      spec=SPEC, cipher="plain", seed=0)
+        for kind in TOPOLOGIES:
+            r = run_on_runtime(inst.A, inst.y, cfg,
+                               topology=topo_mod.make(kind, K), link=LINK)
+            mse = _mse_curve(r.history, inst.x_true)
+            if K not in targets:  # convergence is topology-independent
+                targets[K] = 1.05 * float(mse[-1])
+            hit = np.nonzero(mse <= targets[K])[0]
+            it = int(hit[0]) if hit.size else None
+            iter_times = r.stats["runtime"]["iter_times"]
+            t_hit = iter_times[it] if it is not None else None
+            results.append({
+                "topology": kind, "edges": K,
+                "mse_target": targets[K],
+                "iters_to_target": it,
+                "virtual_s_to_target": t_hit,
+                "virtual_s_total": r.stats["runtime"]["virtual_time"],
+                "final_mse": float(mse[-1]),
+                "traffic_bytes": r.stats["traffic_bytes"],
+                "events": r.stats["runtime"]["events"],
+            })
+            emit(rows, f"topo_{kind}_K{K}",
+                 t_hit if t_hit is not None else float("nan"),
+                 derived=f"iters_to_target={it}")
+    with open(OUT, "w") as f:
+        json.dump({"mse_targets": {str(k): v for k, v in targets.items()},
+                   "link": dataclasses.asdict(LINK),
+                   "results": results}, f, indent=1)
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\n".join(rows))
+    print(f"wrote {OUT}")

@@ -10,6 +10,7 @@
   fig8  bench_total_time   T_pre/T_total by scheme and key length
   tab345 bench_latency     per-node latency decomposition
   fig10 bench_power_grid   power-network reconstruction AUROC/AUPRC
+  topo  bench_topology     topology x edge-count runtime sweep
 """
 from __future__ import annotations
 
@@ -26,6 +27,7 @@ BENCHES = [
     ("tab345", "bench_latency"),
     ("fig10", "bench_power_grid"),
     ("roofline", "bench_roofline"),
+    ("topo", "bench_topology"),
 ]
 
 

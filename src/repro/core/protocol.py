@@ -30,7 +30,12 @@ via measured per-op throughput, and bench_total_time.py into Fig. 8.
 Straggler mitigation (fault-tolerance at the protocol level): with a
 ``deadline`` and a simulated per-edge latency model, the master proceeds with
 stale x-hat blocks for late edges — sound because the update (10) is
-blockwise (stale blocks delay convergence but never corrupt state).
+blockwise (stale blocks delay convergence but never corrupt state).  The
+``deadline``/``latency_fn`` knobs are kept on :class:`ProtocolConfig`, but
+their implementation lives in the event-driven runtime
+(``repro.runtime.runner``): ``run_protocol`` delegates there whenever a
+deadline is set (and for the ``auto``-dispatch cipher), while the plain
+synchronous loop below remains the bit-exactness reference.
 """
 from __future__ import annotations
 
@@ -203,13 +208,21 @@ class ProtocolConfig:
     lam: float = 1.0
     iters: int = 50
     spec: QuantSpec = QuantSpec()
-    cipher: str = "plain"              # plain | gold | vec
+    cipher: str = "plain"              # plain | gold | vec | auto
     key_bits: int = 256
     crt: bool = True
     collaborative: bool = False        # Algorithm 3 master/edge CRT split
     kernel_backend: str | None = None  # vec cipher kernel backend
     y_scale: str = "consistent"
     seed: int = 0
+    # straggler knobs — handled by the runtime's deadline mode. Setting a
+    # deadline ALONE races it against the runtime's modeled latencies
+    # (link models + CostModel compute charges); latency_fn, when given,
+    # replaces the compute charge with an explicit per-(edge, iter)
+    # response time — link hops and scheduler ticks still add on top, so
+    # a latency within ~ms of the deadline can tip stale where the
+    # retired inline check (bare latency_fn > deadline) did not.
+    # (Historically deadline without latency_fn was a no-op.)
     deadline: float | None = None      # straggler cutoff (simulated seconds)
     latency_fn: Callable[[int, int], float] | None = None  # (edge, iter)->s
 
@@ -272,9 +285,47 @@ class EdgeNode:
 # Protocol driver (master node logic)
 # ---------------------------------------------------------------------------
 
+def check_plaintext_fits(key: gold.PaillierKey, spec: QuantSpec,
+                         n_dim: int) -> None:
+    """Raise unless the Theorem-1 integer chain stays below n (Remark 2)."""
+    need = spec.plaintext_bits(n_dim)
+    if need >= key.n.bit_length():
+        raise ValueError(
+            f"plaintext chain needs {need} bits but n has "
+            f"{key.n.bit_length()}; raise key_bits or lower Delta")
+
+
+def make_box(cfg: ProtocolConfig, n_dim: int, rng: random.Random,
+             counter: "OpCounter"):
+    """Key material + cipher box for ``cfg.cipher``; returns ``(box, key)``.
+
+    ``auto`` (per-op adaptive dispatch) is resolved by the runtime —
+    ``repro.runtime.runner`` builds an AdaptiveBox itself so this module
+    never imports the runtime package.
+    """
+    if cfg.cipher == "plain":
+        return PlainBox(cfg.spec, n_dim, counter=counter), None
+    # g = n+1 fast path also serves Algorithm 3: the masked p^2-space
+    # offload uses the raw g and retains correctness either way
+    key = gold.keygen(cfg.key_bits, rng, g=None)
+    check_plaintext_fits(key, cfg.spec, n_dim)
+    if cfg.cipher == "gold":
+        return GoldBox(key, rng, crt=cfg.crt, counter=counter), key
+    if cfg.cipher == "vec":
+        return VecBox(key, rng, backend=cfg.kernel_backend,
+                      counter=counter), key
+    raise ValueError(cfg.cipher)
+
+
 def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
                  ) -> ProtocolResult:
     """Run 3P-ADMM-PC2 end to end; master-node state lives in this frame."""
+    if cfg.deadline is not None or cfg.cipher == "auto":
+        # straggler/deadline semantics and adaptive dispatch live in the
+        # event-driven runtime; the loop below is the synchronous reference
+        from ..runtime.runner import run_on_runtime
+        return run_on_runtime(A, y, cfg)
+
     rng = random.Random(cfg.seed)
     M, N = A.shape
     K = cfg.K
@@ -283,27 +334,7 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
     spec = cfg.spec
 
     counter = OpCounter()
-    # --- key material / cipher box --------------------------------------
-    if cfg.cipher == "plain":
-        box = PlainBox(spec, Nk, counter=counter)
-        key = None
-    else:
-        g = None
-        if cfg.collaborative:
-            # Algorithm 3 exercises general-g ModExp paths
-            g = None  # n+1 retains correctness; masked path uses raw g
-        key = gold.keygen(cfg.key_bits, rng, g=g)
-        need = spec.plaintext_bits(Nk)
-        if need >= key.n.bit_length():
-            raise ValueError(
-                f"plaintext chain needs {need} bits but n has "
-                f"{key.n.bit_length()}; raise key_bits or lower Delta")
-        if cfg.cipher == "gold":
-            box = GoldBox(key, rng, crt=cfg.crt, counter=counter)
-        elif cfg.cipher == "vec":
-            box = VecBox(key, rng, backend=cfg.kernel_backend, counter=counter)
-        else:
-            raise ValueError(cfg.cipher)
+    box, key = make_box(cfg, Nk, rng, counter)
 
     traffic = defaultdict(int)
 
@@ -337,9 +368,7 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
     x_prev = np.zeros(N)
     z = np.zeros(N)
     v = np.zeros(N)
-    x_hat_cache: list[object] = [None] * K
     history = np.zeros((cfg.iters, N))
-    stale_events = 0
 
     for t in range(cfg.iters):
         x_new = np.zeros(N)
@@ -353,18 +382,7 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
             traffic["master->edge"] += 2 * box.ct_bytes(Nk)
 
             w_sum = float(np.sum(zk - vk))
-            late = False
-            if cfg.deadline is not None and cfg.latency_fn is not None:
-                late = cfg.latency_fn(k, t) > cfg.deadline
-            if late and x_hat_cache[k] is not None:
-                # straggler: reuse the stale block TOGETHER with the w_sum
-                # of the round that produced it (the Theorem-1 correction
-                # must match the ciphertext chain's inputs)
-                x_hat, w_sum = x_hat_cache[k]
-                stale_events += 1
-            else:
-                x_hat = edge.private_step(cz, cv, box)
-                x_hat_cache[k] = (x_hat, w_sum)
+            x_hat = edge.private_step(cz, cv, box)
             traffic["edge->master"] += box.ct_bytes(Nk)
 
             if cfg.collaborative and key is not None and cfg.cipher == "gold":
@@ -387,7 +405,7 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
              "key_bits": None if key is None else key.n.bit_length(),
              "cipher": cfg.cipher}
     return ProtocolResult(x=x_prev, history=history, stats=stats,
-                          stale_events=stale_events)
+                          stale_events=0)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
+from repro.launch import mesh as mesh_mod
 from repro.models import registry, layers as L
 from repro.train import loop as loop_mod
 from repro.train.optimizer import OptConfig
@@ -29,8 +30,7 @@ def main():
         jax.config.update("jax_use_shardy_partitioner", True)
 
     cfg = get_config(args.arch)
-    mesh = jax.make_mesh((16, 16), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_mod.make_mesh((16, 16), ("data", "model"))
     if args.constraint == "seq":
         L.set_activation_sharding(NamedSharding(mesh, P("data", "model", None)))
     elif args.constraint == "hidden":

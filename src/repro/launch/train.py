@@ -20,7 +20,7 @@ from repro.data.pipeline import TokenPipeline
 from repro.train import checkpoint as ckpt_mod
 from repro.train import loop as loop_mod
 from repro.train.optimizer import OptConfig
-from repro.launch.mesh import mesh_shape_dict, dp_axes
+from repro.launch.mesh import make_mesh, mesh_shape_dict, dp_axes
 
 
 def main():
@@ -43,8 +43,7 @@ def main():
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     dims = [int(x) for x in args.mesh.split(",")]
     axes = ("data", "model")[:len(dims)]
-    mesh = jax.make_mesh(tuple(dims), axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    mesh = make_mesh(tuple(dims), axes)
     mesh_shape = mesh_shape_dict(mesh)
 
     opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),

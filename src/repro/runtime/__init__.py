@@ -1,0 +1,23 @@
+"""repro.runtime — asynchronous edge-network runtime.
+
+Event-driven simulation of the paper's master/edge deployment: a virtual
+clock scheduler (``scheduler``), pluggable per-link network models
+(``transport``) over generated topologies (``topology``), adaptive
+cipher-backend dispatch (``dispatch``), crypto-op coalescing
+(``coalesce``), and the protocol phases as actors (``runner``).
+
+Entry points: ``repro.launch.edge_sim`` (CLI) and
+``benchmarks/bench_topology.py`` (topology x node-count sweeps).
+"""
+from .scheduler import Scheduler
+from .topology import Topology, make, star, ring, full_mesh, hierarchical
+from .transport import LinkModel, Message, Transport
+from .dispatch import AdaptiveBox, CostModel, calibrate
+from .coalesce import CoalesceQueue
+from .runner import run_on_runtime
+
+__all__ = [
+    "Scheduler", "Topology", "make", "star", "ring", "full_mesh",
+    "hierarchical", "LinkModel", "Message", "Transport", "AdaptiveBox",
+    "CostModel", "calibrate", "CoalesceQueue", "run_on_runtime",
+]

@@ -1,0 +1,220 @@
+"""Crypto-op batching queue — one kernel launch per tick, not per edge.
+
+Actors never call the cipher box directly: they ``submit`` ops to this
+queue with a callback.  Submissions accumulate until the next tick
+boundary (``tick_s`` of virtual time), then :meth:`flush` groups them by
+``(op, element shape)`` and executes each group as ONE batched box call:
+
+* ``enc`` / ``add`` / ``dec`` are elementwise — K edges' vectors are
+  concatenated, run through a single ``paillier_vec`` launch (or one
+  gold/plain call), and split back;
+* same-shaped ``matvec`` groups on the vec backend go through
+  :func:`c_matvec_many`, which flattens all K ``(M, N)`` ModExp blocks
+  into one kernel launch and shares the log-tree row reduction.
+
+Because the underlying ops are exact modular arithmetic, coalescing is
+bit-transparent: results and OpCounter totals are identical to issuing
+each op alone (asserted in tests/test_dispatch.py).  Boxes that cannot
+concatenate opaque ciphertexts (the AdaptiveBox wrapper) fall back to
+per-entry execution inside the same flush event.
+
+``counter.phase`` is captured at submit time and restored per group at
+flush time, so per-phase accounting survives the deferred execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core import paillier_vec as pv
+from ..kernels import ops
+from .scheduler import Scheduler
+
+_MATVEC_JIT: dict = {}
+_MATVEC_JIT_MAX = 32   # FIFO-bounded: sweeps over many keys/shapes must
+                       # not pin compiled executables (and their key
+                       # material) for the process lifetime
+
+
+def c_matvec_many(vk, Ks: jnp.ndarray, cs: jnp.ndarray,
+                  exp_limbs: int = 4, backend: str | None = None):
+    """Batched homomorphic matvec: out[b, i] = prod_j cs[b, j]^{Ks[b,i,j]}.
+
+    The (B, M, N) exponent block becomes a single flattened ModExp launch
+    — the coalesced form of ``paillier_vec.c_matvec`` — followed by one
+    shared log-depth mulmod tree over j.
+    """
+    B, M, N = Ks.shape
+    L2 = vk.pack_n2.L16
+
+    def body(Ks, cs):
+        bases = jnp.broadcast_to(cs[:, None, :, :], (B, M, N, L2))
+        powed = ops.modexp(bases.reshape(B * M * N, L2),
+                           pv.int64_to_limbs(Ks.reshape(-1), exp_limbs),
+                           vk.pack_n2, backend=backend)
+        cur = powed.reshape(B * M, N, L2)
+        n_cur = N
+        while n_cur > 1:
+            half = n_cur // 2
+            a = cur[:, :half].reshape(B * M * half, L2)
+            b = cur[:, half:2 * half].reshape(B * M * half, L2)
+            prod = ops.mulmod(a, b, vk.pack_n2,
+                              backend=backend).reshape(B * M, half, L2)
+            if n_cur % 2:
+                prod = jnp.concatenate([prod, cur[:, -1:]], axis=1)
+                n_cur = half + 1
+            else:
+                n_cur = half
+            cur = prod
+        return cur[:, 0].reshape(B, M, L2)
+
+    key = (id(vk), "cmv_many", backend, exp_limbs, (B, M, N))
+    fn = _MATVEC_JIT.get(key)
+    if fn is None:
+        import jax
+        while len(_MATVEC_JIT) >= _MATVEC_JIT_MAX:
+            _MATVEC_JIT.pop(next(iter(_MATVEC_JIT)))
+        fn = _MATVEC_JIT[key] = jax.jit(body)
+    return fn(Ks, cs)
+
+
+@dataclasses.dataclass
+class _Entry:
+    args: tuple
+    phase: str
+    cb: Callable
+
+
+def _cat(parts):
+    if isinstance(parts[0], list):
+        out = []
+        for p in parts:
+            out.extend(p)
+        return out
+    if isinstance(parts[0], np.ndarray):
+        return np.concatenate(parts)
+    return jnp.concatenate(parts)
+
+
+def _split(data, sizes):
+    out, i = [], 0
+    for n in sizes:
+        out.append(data[i:i + n])
+        i += n
+    return out
+
+
+class CoalesceQueue:
+    def __init__(self, sched: Scheduler, box, counter=None,
+                 tick_s: float = 1e-4):
+        self.sched = sched
+        self.box = box
+        self.counter = counter if counter is not None \
+            else getattr(box, "counter", None)
+        self.tick_s = tick_s
+        self.pending: dict[tuple, list[_Entry]] = {}
+        self._flush_posted = False
+        self.launches = 0          # batched box/kernel invocations
+        self.coalesced_ops = 0     # ops that shared a launch with others
+
+    # -- submission ------------------------------------------------------
+    def submit(self, op: str, args: tuple, cb: Callable) -> None:
+        """Queue ``op`` (enc/add/dec/matvec) for the next tick flush."""
+        if op == "matvec":
+            shape = tuple(np.asarray(args[0]).shape)
+        else:
+            shape = (self._size(args[0]),)
+        phase = self.counter.phase if self.counter is not None else "?"
+        self.pending.setdefault((op, shape), []).append(
+            _Entry(args=args, phase=phase, cb=cb))
+        if not self._flush_posted:
+            self._flush_posted = True
+            # next tick strictly after now; float division can put an exact
+            # boundary a hair below its integer index, so snap before +1
+            q = self.sched.now / self.tick_s
+            idx = round(q) if abs(q - round(q)) < 1e-9 else int(q)
+            self.sched.at((idx + 1) * self.tick_s, self.flush,
+                          label="coalesce.flush")
+
+    @staticmethod
+    def _size(x) -> int:
+        if isinstance(x, list):
+            return len(x)
+        if hasattr(x, "shape"):
+            return int(np.asarray(x.shape[0]))
+        return len(x)
+
+    # -- execution -------------------------------------------------------
+    def flush(self) -> None:
+        groups, self.pending = self.pending, {}
+        self._flush_posted = False
+        batchable = getattr(self.box, "name", "") in ("plain", "gold", "vec")
+        for (op, shape), entries in sorted(groups.items(),
+                                           key=lambda kv: repr(kv[0])):
+            if self.counter is not None:
+                self.counter.phase = entries[0].phase
+            # matvec only truly fuses on the vec backend (other boxes loop
+            # per entry inside the group runner) — keep the telemetry honest
+            fused = batchable and len(entries) > 1 and \
+                (op != "matvec" or getattr(self.box, "name", "") == "vec")
+            if not fused:
+                for e in entries:
+                    e.cb(self._run_one(op, e.args))
+                    self.launches += 1
+                continue
+            self.coalesced_ops += len(entries)
+            self.launches += 1
+            for e, res in zip(entries, self._run_group(op, entries)):
+                e.cb(res)
+        # callbacks may have queued follow-up ops for the next tick
+
+    def _run_one(self, op: str, args: tuple):
+        if op == "enc":
+            return self.box.encrypt(args[0])
+        if op == "add":
+            return self.box.add(args[0], args[1])
+        if op == "dec":
+            return self.box.decrypt(args[0])
+        if op == "matvec":
+            return self.box.matvec(args[0], args[1])
+        raise ValueError(op)
+
+    def _run_group(self, op: str, entries: list[_Entry]) -> list:
+        if op == "enc":
+            sizes = [np.asarray(e.args[0]).size for e in entries]
+            big = self.box.encrypt(np.concatenate(
+                [np.asarray(e.args[0]).reshape(-1) for e in entries]))
+            return _split(big, sizes)
+        if op == "add":
+            sizes = [self._size(e.args[0]) for e in entries]
+            big = self.box.add(_cat([e.args[0] for e in entries]),
+                               _cat([e.args[1] for e in entries]))
+            return _split(big, sizes)
+        if op == "dec":
+            sizes = [self._size(e.args[0]) for e in entries]
+            big = self.box.decrypt(_cat([e.args[0] for e in entries]))
+            return _split(big, sizes)
+        if op == "matvec":
+            return self._run_matvec_group(entries)
+        raise ValueError(op)
+
+    def _run_matvec_group(self, entries: list[_Entry]) -> list:
+        if getattr(self.box, "name", "") != "vec":
+            out = []
+            for e in entries:
+                out.append(self.box.matvec(e.args[0], e.args[1]))
+            return out
+        # one fused launch for all same-shaped (M, N) blocks
+        vk = self.box.vk
+        Ks = jnp.stack([jnp.asarray(np.asarray(e.args[0], np.int64))
+                        for e in entries])
+        cs = jnp.stack([e.args[1] for e in entries])
+        B, M, N = Ks.shape
+        if self.counter is not None:  # same totals box.matvec would bump
+            self.counter.bump("modexp", B * M * N)
+            self.counter.bump("mulmod", B * M * (N - 1))
+        out = c_matvec_many(vk, Ks, cs, backend=self.box.backend)
+        return [out[i] for i in range(B)]

@@ -1,0 +1,399 @@
+"""3P-ADMM-PC2 as actor programs on the edge-network runtime.
+
+The three protocol phases of ``core/protocol.py`` become message-driven
+state machines: a :class:`MasterActor` drives init -> share -> iterate,
+K :class:`EdgeActor`s evaluate eq. (13) on ciphertexts, and every crypto
+op funnels through the :class:`~repro.runtime.coalesce.CoalesceQueue`
+(same-tick ops from different edges share one kernel launch).
+
+Modes
+-----
+* ``sync``     — the master barriers on all K replies per iteration.
+  Bit-for-bit identical to ``protocol.run_protocol`` (asserted in
+  tests/test_runtime.py): same quantization, same Jacobi update order,
+  same per-message byte accounting.
+* ``deadline`` — the master arms a per-iteration timer at ``cfg.deadline``
+  virtual seconds; replies missing when it fires are replaced by the
+  stale cached block *paired with the w-sum of the round that produced
+  it* (the Theorem-1 correction must match the ciphertext chain inputs).
+  An edge that has never replied — or whose cached block is more than
+  ``stale_limit`` rounds old (SSP-style bounded staleness; late replies
+  refresh the cache as they trickle in) — is waited for instead, so even
+  a deadline shorter than the physical round-trip degrades into periodic
+  barriers rather than frozen blocks.  This subsumes the old inline
+  straggler hack in ``run_protocol``, which now delegates here.
+
+Per-edge response latency comes from ``cfg.latency_fn`` when given
+(reproducing the legacy knob), else from the :class:`CostModel` estimate
+of the edge's homomorphic step.
+"""
+from __future__ import annotations
+
+import random
+from functools import partial
+
+import numpy as np
+
+from ..core import admm as admm_mod
+from ..core import paillier as gold
+from ..core import protocol
+from ..core.quantization import gamma1, gamma2, dequantize_theorem1
+from . import dispatch
+from .coalesce import CoalesceQueue
+from .scheduler import Scheduler
+from .topology import MASTER, Topology, edge_name, star
+from .transport import LinkModel, Message, Transport
+
+import jax.numpy as jnp
+
+
+class EdgeActor:
+    """Wraps a ``protocol.EdgeNode``; owns only Remark-4-visible state."""
+
+    def __init__(self, k: int, rt: "_Runtime"):
+        self.k = k
+        self.name = edge_name(k)
+        self.rt = rt
+        self.node = protocol.EdgeNode(k, rt.cfg.spec)
+
+    def on_message(self, msg: Message) -> None:
+        rt = self.rt
+        if msg.tag == "init":
+            AkTAk, rho = msg.payload
+            Bk = self.node.init_phase(AkTAk, rho)
+            rt.transport.send(self.name, MASTER, "init_ok", (self.k, Bk),
+                              nbytes=Bk.nbytes)
+        elif msg.tag == "collab":
+            self.node.collab_setup(*msg.payload)
+        elif msg.tag == "share":
+            self.node.store_shared(msg.payload)
+            rt.transport.send(self.name, MASTER, "share_ok", self.k)
+        elif msg.tag == "step":
+            t, cz, cv = msg.payload
+            # eq. (13) chain; each op coalesces with the other edges' ops
+            rt.cq.submit("add", (cz, cv),
+                         lambda s: rt.cq.submit(
+                             "matvec", (self.node.Gb, s),
+                             lambda tv: rt.cq.submit(
+                                 "add", (self.node.alpha_hat, tv),
+                                 partial(self._reply, t))))
+        else:
+            raise ValueError(f"edge got unexpected tag {msg.tag!r}")
+
+    def _reply(self, t: int, x_hat) -> None:
+        rt, cfg = self.rt, self.rt.cfg
+        if cfg.latency_fn is not None:
+            extra = cfg.latency_fn(self.k, t)
+        else:
+            extra = rt.cost.edge_step_cost(rt.nk)
+        if cfg.collaborative and rt.key is not None and cfg.cipher == "gold":
+            # decryption assist: (x-hat)' = x-hat mod p^2 rides back too
+            self.node.reduce_p2(x_hat)
+            rt.transport.send(
+                self.name, MASTER, "assist", None,
+                nbytes=(rt.key.p2.bit_length() + 7) // 8 * rt.nk,
+                extra_delay=extra)
+        rt.transport.send(self.name, MASTER, "xhat", (self.k, t, x_hat),
+                          nbytes=rt.box.ct_bytes(rt.nk), extra_delay=extra)
+
+
+class MasterActor:
+    def __init__(self, rt: "_Runtime", A: np.ndarray, y: np.ndarray):
+        self.rt = rt
+        cfg = rt.cfg
+        self.A, self.y = A, y
+        K, Nk = cfg.K, rt.nk
+        ys = y / K if cfg.y_scale == "consistent" else y
+        self.AkTAk = []
+        self.Ak = []
+        for k in range(K):
+            Ak = A[:, k * Nk:(k + 1) * Nk]
+            self.Ak.append(Ak)
+            self.AkTAk.append(Ak.T @ Ak)
+        self.ys = ys
+        self.Bbar_rowsums: list = [None] * K
+        self.alphas_real: list = [None] * K
+        self._n_init = 0
+        self._n_share = 0
+        # iterate-phase state (mirrors run_protocol's master frame)
+        N = A.shape[1]
+        self.x_prev = np.zeros(N)
+        self.z = np.zeros(N)
+        self.v = np.zeros(N)
+        self.history = np.zeros((cfg.iters, N))
+        self.x_hat_cache: list = [None] * K   # (x_hat, w_sum, round)
+        self._w_rounds: dict[int, dict[int, float]] = {}
+        self._cts_rounds: dict[int, dict[int, dict]] = {}
+        self.stale_events = 0
+        self.iter_times: list[float] = []
+        self.t = -1
+        self.done = False
+
+    # -- Initialization phase -------------------------------------------
+    def start(self) -> None:
+        rt, cfg = self.rt, self.rt.cfg
+        rt.counter.phase = "init"
+        if cfg.iters == 0:
+            self.done = True
+            return
+        for k in range(cfg.K):
+            if cfg.collaborative and rt.key is not None:
+                rt.transport.send(MASTER, edge_name(k), "collab",
+                                  (rt.key.p2, rt.key.phi_p2, rt.key.g))
+            rt.transport.send(MASTER, edge_name(k), "init",
+                              (self.AkTAk[k], cfg.rho),
+                              nbytes=self.AkTAk[k].nbytes)
+
+    def on_message(self, msg: Message) -> None:
+        if msg.tag == "init_ok":
+            k, Bk = msg.payload
+            self.Bbar_rowsums[k] = (Bk * self.rt.cfg.rho) @ np.ones(self.rt.nk)
+            self.alphas_real[k] = Bk @ (self.Ak[k].T @ self.ys)
+            self._n_init += 1
+            if self._n_init == self.rt.cfg.K:
+                self._share()
+        elif msg.tag == "share_ok":
+            self._n_share += 1
+            if self._n_share == self.rt.cfg.K:
+                self.rt.counter.phase = "iterate"
+                self._iterate(0)
+        elif msg.tag == "xhat":
+            self._on_xhat(*msg.payload)
+        elif msg.tag == "assist":
+            pass  # byte accounting only; content unused by the simulation
+        else:
+            raise ValueError(f"master got unexpected tag {msg.tag!r}")
+
+    # -- Data security sharing phase -------------------------------------
+    def _share(self) -> None:
+        rt = self.rt
+        rt.counter.phase = "share"
+        for k in range(rt.cfg.K):
+            q_alpha = np.asarray(gamma1(self.alphas_real[k], rt.cfg.spec))
+            rt.cq.submit("enc", (q_alpha,), partial(self._share_ready, k))
+
+    def _share_ready(self, k: int, c_alpha) -> None:
+        rt = self.rt
+        rt.transport.send(MASTER, edge_name(k), "share", c_alpha,
+                          nbytes=rt.box.ct_bytes(rt.nk))
+
+    # -- Parallel privacy-computing phase ---------------------------------
+    def _iterate(self, t: int) -> None:
+        rt, cfg = self.rt, self.rt.cfg
+        self.t = t
+        self.iter_start = rt.sched.now
+        self.replies: dict[int, object] = {}
+        self.w_cur: dict[int, float] = {}
+        self.finalized = False
+        self.deadline_passed = False
+        self.must_wait: set[int] = set()
+        for k in range(cfg.K):
+            sl = slice(k * rt.nk, (k + 1) * rt.nk)
+            zk, vk = self.z[sl], self.v[sl]
+            self.w_cur[k] = float(np.sum(zk - vk))
+            qz = np.asarray(gamma2(zk, cfg.spec))
+            qv = np.asarray(gamma2(-vk, cfg.spec))
+            rt.cq.submit("enc", (qz,), partial(self._enc_done, t, k, "z"))
+            rt.cq.submit("enc", (qv,), partial(self._enc_done, t, k, "v"))
+        self._w_rounds[t] = self.w_cur
+        if rt.mode == "deadline":
+            rt.sched.after(cfg.deadline, partial(self._on_deadline, t),
+                           label=f"deadline:{t}")
+
+    def _enc_done(self, t: int, k: int, which: str, ct) -> None:
+        # ciphertext pairs are keyed by the round that quantized them, so a
+        # round closing (deadline) between submit and flush can neither mix
+        # its z/v into the next round nor double-send a step; the step goes
+        # out tagged with ITS round even if that round is already closed —
+        # the edge's late reply then refreshes the stale cache.
+        rt = self.rt
+        pair = self._cts_rounds.setdefault(t, {}).setdefault(k, {})
+        pair[which] = ct
+        if len(pair) == 2:
+            rt.transport.send(MASTER, edge_name(k), "step",
+                              (t, pair["z"], pair["v"]),
+                              nbytes=2 * rt.box.ct_bytes(rt.nk))
+            del self._cts_rounds[t][k]   # pair consumed; keep the dict flat
+
+    def _on_xhat(self, k: int, t_msg: int, x_hat) -> None:
+        # a current-round reply is accepted as long as the round is still
+        # open — even past the deadline while the master blocks on a
+        # must_wait edge, the actual block beats its stale copy and is not
+        # mis-counted as a stale substitution
+        if t_msg == self.t and not self.finalized:
+            self.replies[k] = x_hat
+            self.x_hat_cache[k] = (x_hat, self.w_cur[k], t_msg)
+            self.must_wait.discard(k)
+            if len(self.replies) == self.rt.cfg.K or \
+                    (self.deadline_passed and not self.must_wait):
+                self._finalize()
+            return
+        # Straggler reply of a round that already closed on it: never used
+        # for that round, but it refreshes the cache (with the w-sum of the
+        # round that produced it) so a persistently late edge keeps
+        # advancing on recent blocks instead of freezing on one old one.
+        w = self._w_rounds.get(t_msg, {}).get(k)
+        cached = self.x_hat_cache[k]
+        if w is not None and (cached is None or cached[2] < t_msg):
+            self.x_hat_cache[k] = (x_hat, w, t_msg)
+
+    def _on_deadline(self, t: int) -> None:
+        if t != self.t or self.finalized:
+            return
+        self.deadline_passed = True
+        # block on an edge with no block at all OR one older than the
+        # staleness bound (SSP-style): unbounded lag would let a deadline
+        # shorter than the physical round-trip freeze blocks forever
+        self.must_wait = {
+            k for k in range(self.rt.cfg.K)
+            if k not in self.replies
+            and (self.x_hat_cache[k] is None
+                 or t - self.x_hat_cache[k][2] > self.rt.stale_limit)}
+        if not self.must_wait:
+            self._finalize()
+
+    def _finalize(self) -> None:
+        rt, cfg = self.rt, self.rt.cfg
+        self.finalized = True
+        self._x_new = np.zeros(self.A.shape[1])
+        self._n_dec = 0
+        for k in range(cfg.K):
+            if k in self.replies:
+                x_hat, w_sum = self.replies[k], self.w_cur[k]
+            else:
+                x_hat, w_sum, _ = self.x_hat_cache[k]
+                self.stale_events += 1
+            rt.cq.submit("dec", (x_hat,), partial(self._dec_done, k, w_sum))
+
+    def _dec_done(self, k: int, w_sum: float, R) -> None:
+        rt, cfg = self.rt, self.rt.cfg
+        sl = slice(k * rt.nk, (k + 1) * rt.nk)
+        self._x_new[sl] = np.asarray(dequantize_theorem1(
+            np.asarray(R).astype(np.float64), self.Bbar_rowsums[k],
+            w_sum, rt.nk, cfg.spec))
+        self._n_dec += 1
+        if self._n_dec < cfg.K:
+            return
+        # master updates (10b)/(10c) with the (t-1) iterate — Jacobi order
+        z_new = np.asarray(admm_mod.soft_threshold(
+            jnp.asarray(self.v + self.x_prev), cfg.lam / cfg.rho))
+        self.v = self.v + self.x_prev - z_new
+        self.z = z_new
+        self.x_prev = self._x_new
+        self.history[self.t] = self._x_new
+        self.iter_times.append(rt.sched.now)
+        if self.t + 1 < cfg.iters:
+            self._iterate(self.t + 1)
+        else:
+            self.done = True
+
+
+class _Runtime:
+    """Wiring bag shared by the actors (scheduler, transport, crypto)."""
+
+    def __init__(self, sched, transport, cq, box, key, counter, cfg, nk,
+                 mode, cost, stale_limit):
+        self.sched = sched
+        self.transport = transport
+        self.cq = cq
+        self.box = box
+        self.key = key
+        self.counter = counter
+        self.cfg = cfg
+        self.nk = nk
+        self.mode = mode
+        self.cost = cost
+        self.stale_limit = stale_limit
+
+
+def run_on_runtime(A: np.ndarray, y: np.ndarray,
+                   cfg: "protocol.ProtocolConfig", *,
+                   topology: Topology | None = None,
+                   link: LinkModel | None = None,
+                   per_link: dict | None = None,
+                   mode: str | None = None,
+                   tick_s: float = 1e-4,
+                   cost_model: dispatch.CostModel | None = None,
+                   stale_limit: int = 4,
+                   table: dict | None = None,
+                   calib_path: str | None = None,
+                   trace: bool = False) -> "protocol.ProtocolResult":
+    """Run 3P-ADMM-PC2 on the simulated edge network; see module docstring.
+
+    Returns a ``ProtocolResult`` whose ``stats`` carry the usual op/traffic
+    counters plus a ``"runtime"`` section (virtual clock, per-iteration
+    completion times, per-link bytes, coalescing and dispatch telemetry).
+    """
+    rng = random.Random(cfg.seed)
+    M, N = A.shape
+    K = cfg.K
+    assert N % K == 0, "pad N to a multiple of K"
+    nk = N // K
+    mode = mode or ("deadline" if cfg.deadline is not None else "sync")
+    if mode == "deadline" and cfg.deadline is None:
+        raise ValueError("deadline mode needs cfg.deadline")
+
+    counter = protocol.OpCounter()
+    if cfg.cipher == "auto":
+        key = gold.keygen(cfg.key_bits, rng)
+        protocol.check_plaintext_fits(key, cfg.spec, nk)
+        table = table or dispatch.calibrate(
+            key_bits=(cfg.key_bits,), batch_sizes=(nk,),
+            backends=("gold", "vec"), path=calib_path)
+        box = dispatch.AdaptiveBox(key, rng, table, counter=counter,
+                                   kernel_backend=cfg.kernel_backend)
+    else:
+        box, key = protocol.make_box(cfg, nk, rng, counter)
+
+    topo = topology or star(K)
+    if topo.n_edges != K:
+        raise ValueError(f"topology has {topo.n_edges} edges, cfg.K={K}")
+    sched = Scheduler(seed=cfg.seed, trace=trace)
+    transport = Transport(sched, topo, default=link, per_link=per_link)
+    cq = CoalesceQueue(sched, box, counter=counter, tick_s=tick_s)
+    cost = cost_model or dispatch.CostModel()
+    rt = _Runtime(sched, transport, cq, box, key, counter, cfg, nk, mode,
+                  cost, stale_limit)
+
+    master = MasterActor(rt, np.asarray(A, np.float64),
+                         np.asarray(y, np.float64))
+    transport.bind(MASTER, master.on_message)
+    edge_actors = [EdgeActor(k, rt) for k in range(K)]
+    for ea in edge_actors:
+        transport.bind(ea.name, ea.on_message)
+    # relays are pure forwarding hops: Transport prices them per hop and
+    # never delivers to them, so they need no actor.
+
+    master.start()
+    sched.run()
+    if not master.done:
+        raise RuntimeError(
+            f"runtime drained at t={sched.now:.4f}s before the protocol "
+            f"finished (iteration {master.t}/{cfg.iters})")
+
+    stats = {
+        "ops": counter.as_dict(),
+        "traffic_bytes": dict(transport.traffic),
+        "key_bits": None if key is None else key.n.bit_length(),
+        "cipher": cfg.cipher,
+        "runtime": {
+            "topology": topo.kind,
+            "mode": mode,
+            "virtual_time": sched.now,
+            "iter_times": list(master.iter_times),
+            "events": sched.events_run,
+            "link_bytes": {f"{u}->{v}": n
+                           for (u, v), n in sorted(transport.link_bytes.items())},
+            "retransmits": transport.retransmits,
+            "coalesced_ops": cq.coalesced_ops,
+            "launches": cq.launches,
+        },
+    }
+    if isinstance(box, dispatch.AdaptiveBox):
+        stats["runtime"]["dispatch"] = {
+            f"{op}:{b}": n for (op, b), n in sorted(box.choices.items())}
+    if trace:
+        stats["runtime"]["trace"] = list(sched.trace)
+    return protocol.ProtocolResult(
+        x=master.x_prev, history=master.history, stats=stats,
+        stale_events=master.stale_events)

@@ -1,0 +1,120 @@
+"""Optional-``hypothesis`` shim so the suite collects on bare environments.
+
+When ``hypothesis`` is installed the real library is re-exported unchanged
+and the property tests run at full strength.  Otherwise a tiny fallback
+implements just the surface these tests use — ``given``, ``settings``
+(``register_profile`` / ``load_profile``) and the ``integers`` / ``floats``
+/ ``lists`` strategies — drawing a deterministic handful of examples
+(range boundaries first, then seeded-random draws) so every property is
+still exercised, just not fuzzed.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _N_EXAMPLES = 6
+
+    class _Strategy:
+        """A draw function plus boundary examples tried first."""
+
+        def __init__(self, draw, boundary=()):
+            self.draw = draw
+            self.boundary = tuple(boundary)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             boundary=(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            bound = [min_value, max_value]
+            if min_value <= 0.0 <= max_value:
+                bound.append(0.0)
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                             boundary=bound)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            bound = []
+            if min_size > 0:
+                bound.append([elements.boundary[0]] * min_size)
+            return _Strategy(draw, boundary=bound)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq),
+                             boundary=(seq[0],))
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda rng: _Data(rng))
+
+    class _Data:
+        """Interactive draw object mirroring ``st.data()``."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.draw(self._rng)
+
+    strategies = _Strategies()
+
+    class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+        _profiles: dict = {}
+        max_examples = _N_EXAMPLES
+
+        def __init__(self, **kw):
+            pass
+
+        def __call__(self, fn):  # used as a no-op decorator
+            return fn
+
+        @classmethod
+        def register_profile(cls, name, **kw):
+            cls._profiles[name] = kw
+
+        @classmethod
+        def load_profile(cls, name):
+            kw = cls._profiles.get(name, {})
+            cls.max_examples = min(kw.get("max_examples", _N_EXAMPLES),
+                                   _N_EXAMPLES)
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                rng = random.Random(fn.__qualname__)
+                cases = []
+                n_bound = max(len(s.boundary) for s in strats) if strats else 0
+                for i in range(n_bound):
+                    cases.append(tuple(
+                        s.boundary[min(i, len(s.boundary) - 1)]
+                        if s.boundary else s.draw(rng) for s in strats))
+                while len(cases) < settings.max_examples:
+                    cases.append(tuple(s.draw(rng) for s in strats))
+                for case in cases:
+                    fn(*args, *case, **kw)
+            # hide the property args from pytest's fixture resolution
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

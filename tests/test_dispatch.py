@@ -1,0 +1,181 @@
+"""Adaptive dispatch + crypto-op coalescing: calibration cache round-trip,
+cost-table routing, cross-representation bit-exactness, batched-launch
+equivalence."""
+import json
+import random
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import paillier as gold
+from repro.core import paillier_vec as pv
+from repro.core import protocol
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import make_lasso
+from repro.runtime import dispatch
+from repro.runtime.coalesce import CoalesceQueue, c_matvec_many
+from repro.runtime.runner import run_on_runtime
+from repro.runtime.scheduler import Scheduler
+
+SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+
+
+def _table(gold_cheap=("enc", "dec"), bits=128, batch=16):
+    """Synthetic calibration table: listed ops cheap on gold, rest on vec."""
+    e = {}
+    for op in dispatch.OPS:
+        cheap = op in gold_cheap
+        e[op] = (1e-6 if cheap else 1e-3, 1e-3 if cheap else 1e-6)
+    return {"version": 1, "entries": {
+        f"gold/{bits}/{batch}": {**{op: v[0] for op, v in e.items()},
+                                 "convert": 1e-8},
+        f"vec/{bits}/{batch}": {**{op: v[1] for op, v in e.items()},
+                                "convert": 1e-8},
+    }}
+
+
+# ---------------------------------------------------------------------------
+# calibration cache
+# ---------------------------------------------------------------------------
+
+def test_calibrate_writes_and_reuses_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "calib.json")
+    calls = []
+    real = dispatch._measure_backend
+
+    def counting(backend, *a, **kw):
+        calls.append(backend)
+        return real(backend, *a, **kw)
+
+    monkeypatch.setattr(dispatch, "_measure_backend", counting)
+    t1 = dispatch.calibrate(key_bits=(128,), batch_sizes=(8,),
+                            backends=("plain", "gold"), path=path)
+    assert sorted(calls) == ["gold", "plain"]
+    assert json.load(open(path)) == t1
+    calls.clear()
+    t2 = dispatch.calibrate(key_bits=(128,), batch_sizes=(8,),
+                            backends=("plain", "gold"), path=path)
+    assert calls == []          # fully served from disk
+    assert t1 == t2
+    # a new grid point measures only the missing entry
+    dispatch.calibrate(key_bits=(128,), batch_sizes=(8, 16),
+                       backends=("plain", "gold"), path=path)
+    assert sorted(calls) == ["gold", "plain"]
+
+
+def test_lookup_nearest_entry():
+    t = _table(batch=16)
+    assert dispatch.lookup(t, "gold", 128, 999) \
+        == t["entries"]["gold/128/16"]
+    # nearest key bits tolerated (keygen may deliver n of bits-1)
+    assert dispatch.lookup(t, "vec", 127, 16) \
+        == t["entries"]["vec/128/16"]
+    with pytest.raises(KeyError, match="no calibration"):
+        dispatch.lookup(t, "plain", 0, 16)
+
+
+def test_cost_model():
+    cm = dispatch.CostModel()
+    assert cm.edge_step_cost(8) > 0
+    cm2 = dispatch.CostModel.from_table(_table(), "vec", 128, 16)
+    assert cm2.unit["enc"] == 1e-3 and cm2.unit["modexp"] == 1e-6
+
+
+# ---------------------------------------------------------------------------
+# adaptive box
+# ---------------------------------------------------------------------------
+
+def test_adaptive_box_routes_by_table_and_stays_exact():
+    key = gold.keygen(128, random.Random(0))
+    box = dispatch.AdaptiveBox(key, random.Random(1),
+                               _table(gold_cheap=("enc", "dec")))
+    m = np.arange(6, dtype=np.int64)
+    c = box.encrypt(m)
+    assert c.rep == "gold"
+    s = box.add(c, box.encrypt(np.ones(6, dtype=np.int64)))
+    assert s.rep == "vec"                       # add is cheap on vec
+    K = np.eye(6, dtype=np.int64) * 2
+    t = box.matvec(K, s)
+    assert t.rep == "vec"
+    out = box.decrypt(t)                        # dec converts back to gold
+    assert list(np.asarray(out, dtype=np.int64)) \
+        == [2 * (x + 1) for x in range(6)]
+    picks = dict(box.choices)
+    assert picks[("enc", "gold")] == 2
+    assert picks[("add", "vec")] == 1 and picks[("matvec", "vec")] == 1
+    assert picks[("dec", "gold")] == 1
+
+
+def test_auto_protocol_bit_exact_vs_plain():
+    inst = make_lasso(24, 48, sparsity=0.1, noise=0.01, seed=1)
+    plain = protocol.run_protocol(inst.A, inst.y, protocol.ProtocolConfig(
+        K=3, lam=0.05, iters=4, spec=SPEC, cipher="plain", seed=0))
+    auto = run_on_runtime(inst.A, inst.y, protocol.ProtocolConfig(
+        K=3, lam=0.05, iters=4, spec=SPEC, cipher="auto", key_bits=128,
+        seed=0), table=_table(gold_cheap=("enc", "dec")))
+    assert np.array_equal(plain.history, auto.history)
+    assert sum(auto.stats["runtime"]["dispatch"].values()) > 0
+
+
+# ---------------------------------------------------------------------------
+# coalescing
+# ---------------------------------------------------------------------------
+
+def _drain(sched):
+    sched.run()
+
+
+def test_coalesce_plain_equivalent_to_direct():
+    box = protocol.PlainBox(SPEC, 8, counter=protocol.OpCounter())
+    sched = Scheduler()
+    cq = CoalesceQueue(sched, box, counter=box.counter)
+    ms = [np.arange(8, dtype=np.int64) + i for i in range(5)]
+    got = {}
+    for i, m in enumerate(ms):
+        cq.submit("enc", (m,), lambda c, i=i: got.setdefault(i, c))
+    _drain(sched)
+    assert cq.launches == 1 and cq.coalesced_ops == 5
+    for i, m in enumerate(ms):
+        assert np.array_equal(got[i], box.encrypt(m))
+    # counter totals equal the per-op sum (5 batched + 5 direct)
+    assert box.counter.counts["init"]["enc"] == 80
+
+
+def test_coalesce_gold_add_and_dec_groups():
+    key = gold.keygen(128, random.Random(0))
+    box = protocol.GoldBox(key, random.Random(1),
+                           counter=protocol.OpCounter())
+    sched = Scheduler()
+    cq = CoalesceQueue(sched, box, counter=box.counter)
+    c1 = box.encrypt(np.array([1, 2, 3]))
+    c2 = box.encrypt(np.array([10, 20, 30]))
+    out = {}
+    cq.submit("add", (c1, c2), lambda r: out.setdefault("s", r))
+    cq.submit("add", (c2, c2), lambda r: out.setdefault("s2", r))
+    _drain(sched)
+    cq.submit("dec", (out["s"],), lambda r: out.setdefault("d", r))
+    cq.submit("dec", (out["s2"],), lambda r: out.setdefault("d2", r))
+    _drain(sched)
+    assert list(out["d"]) == [11, 22, 33]
+    assert list(out["d2"]) == [20, 40, 60]
+
+
+def test_c_matvec_many_matches_per_edge_matvec():
+    key = gold.keygen(128, random.Random(0))
+    vk = pv.make_vec_key(key)
+    rng = random.Random(2)
+    B, M, N = 3, 4, 4
+    Ks = np.array([[[rng.randrange(50) for _ in range(N)]
+                    for _ in range(M)] for _ in range(B)], dtype=np.int64)
+    ms = np.array([[rng.randrange(100) for _ in range(N)]
+                   for _ in range(B)], dtype=np.int64)
+    cs = []
+    for b in range(B):
+        pool = gold.make_r_pool(key, N, rng)
+        rn = jnp.asarray(pv.bi.from_ints(pool, vk.pack_n2.L16))
+        cs.append(pv.encrypt_batch(vk, jnp.asarray(ms[b]), rn))
+    fused = c_matvec_many(vk, jnp.asarray(Ks), jnp.stack(cs))
+    for b in range(B):
+        ref = pv.c_matvec(vk, jnp.asarray(Ks[b]), cs[b])
+        assert np.array_equal(np.asarray(fused[b]), np.asarray(ref)), b

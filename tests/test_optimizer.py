@@ -56,8 +56,6 @@ def test_mesh_helpers():
     from repro.launch import mesh as mesh_mod
     # function form never touches device state at import; helpers pure
     assert mesh_mod.dp_axes.__call__ is not None
-    import jax as _jax
-    m = _jax.make_mesh((1,), ("data",),
-                       axis_types=(_jax.sharding.AxisType.Auto,))
+    m = mesh_mod.make_mesh((1,), ("data",))
     assert mesh_mod.mesh_shape_dict(m) == {"data": 1}
     assert mesh_mod.dp_axes(m) == ("data",)

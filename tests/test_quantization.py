@@ -1,7 +1,7 @@
 """Quantization Gamma_1/Gamma_2 + Theorem-1 dequantization properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import quantization as qz
 

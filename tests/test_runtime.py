@@ -1,0 +1,221 @@
+"""Edge-network runtime: topology generation, scheduler determinism,
+transport byte accounting vs protocol counters, sync-mode bit-exactness,
+deadline-mode straggler convergence, lossy-link recovery."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import admm, protocol
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import make_lasso
+from repro.runtime import LinkModel, topology
+from repro.runtime.runner import run_on_runtime
+
+SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+
+
+@pytest.fixture(scope="module")
+def inst():
+    return make_lasso(24, 48, sparsity=0.1, noise=0.01, seed=1)
+
+
+def _cfg(**kw):
+    base = dict(K=3, lam=0.05, iters=8, spec=SPEC, cipher="plain", seed=0)
+    base.update(kw)
+    return protocol.ProtocolConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+
+def test_topology_shapes():
+    for k in (2, 5, 64):
+        assert topology.star(k).n_edges == k
+        assert topology.ring(k).n_edges == k
+        assert topology.full_mesh(k).n_edges == k
+        assert topology.hierarchical(k).n_edges == k
+    assert len(topology.star(8).links) == 8
+    assert len(topology.ring(8).links) == 9            # cycle incl. master
+    assert len(topology.full_mesh(4).links) == 10      # C(5, 2)
+    h = topology.hierarchical(8, fanout=4)
+    assert sum(n.startswith("relay") for n in h.nodes) == 2
+
+
+def test_topology_routes():
+    s = topology.star(4)
+    assert s.route("master", "edge2") == ("master", "edge2")
+    h = topology.hierarchical(8, fanout=4)
+    assert h.route("master", "edge5") == ("master", "relay1", "edge5")
+    r = topology.ring(6)   # 7-cycle: edge3 is at worst 3 hops from master
+    assert len(r.route("master", "edge3")) <= 4
+    m = topology.full_mesh(6)
+    assert len(m.route("edge0", "edge5")) == 2
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError, match="outside"):
+        topology.star(1)
+    with pytest.raises(ValueError, match="outside"):
+        topology.ring(65)
+    with pytest.raises(ValueError, match="unknown topology"):
+        topology.make("torus", 4)
+
+
+# ---------------------------------------------------------------------------
+# scheduler determinism
+# ---------------------------------------------------------------------------
+
+def test_scheduler_deterministic_event_order(inst):
+    """Same seed => identical event trace and results, even with jitter,
+    losses and an uneven topology in play."""
+    link = LinkModel(jitter_s=2e-3, drop_prob=0.05, timeout_s=5e-3)
+    runs = [run_on_runtime(inst.A, inst.y, _cfg(iters=4),
+                           topology=topology.hierarchical(3, fanout=2),
+                           link=link, trace=True) for _ in range(2)]
+    t0 = runs[0].stats["runtime"]["trace"]
+    t1 = runs[1].stats["runtime"]["trace"]
+    assert t0 == t1
+    assert len(t0) > 50
+    assert np.array_equal(runs[0].history, runs[1].history)
+    assert runs[0].stats["runtime"]["retransmits"] == \
+        runs[1].stats["runtime"]["retransmits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# transport accounting + sync bit-exactness
+# ---------------------------------------------------------------------------
+
+def test_sync_star_bit_exact_and_counters_match_protocol(inst):
+    """The runtime in sync mode IS run_protocol: identical history,
+    identical per-direction traffic bytes, identical per-phase op counts."""
+    cfg = _cfg()
+    ref = protocol.run_protocol(inst.A, inst.y, cfg)
+    rt = run_on_runtime(inst.A, inst.y, cfg)
+    assert np.array_equal(ref.history, rt.history)
+    assert ref.stats["traffic_bytes"] == rt.stats["traffic_bytes"]
+    assert ref.stats["ops"] == rt.stats["ops"]
+
+
+def test_sync_gold_bit_exact_on_ring(inst):
+    cfg = _cfg(cipher="gold", key_bits=160, iters=5)
+    ref = protocol.run_protocol(inst.A, inst.y, cfg)
+    rt = run_on_runtime(inst.A, inst.y, cfg, topology=topology.ring(3))
+    assert np.array_equal(ref.history, rt.history)
+    # same logical messages => same end-to-end traffic, any topology
+    assert ref.stats["traffic_bytes"] == rt.stats["traffic_bytes"]
+
+
+def test_sync_vec_coalesced_bit_exact_hierarchical(inst):
+    """The coalesced paillier_vec path (incl. the fused multi-edge matvec
+    launch) decrypts to the same integers as the per-edge reference."""
+    cfg = _cfg(K=4, cipher="vec", key_bits=128, iters=3)
+    ref = protocol.run_protocol(inst.A, inst.y, cfg)
+    rt = run_on_runtime(inst.A, inst.y, cfg,
+                        topology=topology.hierarchical(4, fanout=2))
+    assert np.array_equal(ref.history, rt.history)
+    assert rt.stats["runtime"]["coalesced_ops"] > 0
+    # hierarchical relays double the per-hop bytes but not the logical ones
+    link_total = sum(rt.stats["runtime"]["link_bytes"].values())
+    logical = sum(rt.stats["traffic_bytes"].values())
+    assert link_total == 2 * logical
+
+
+def test_hierarchical_virtual_clock_slower_than_star(inst):
+    cfg = _cfg(iters=4)
+    t_star = run_on_runtime(inst.A, inst.y, cfg) \
+        .stats["runtime"]["virtual_time"]
+    t_hier = run_on_runtime(inst.A, inst.y, cfg,
+                            topology=topology.hierarchical(3, fanout=2)) \
+        .stats["runtime"]["virtual_time"]
+    assert t_hier > t_star    # extra relay hop on every message
+
+
+# ---------------------------------------------------------------------------
+# deadline (async) mode
+# ---------------------------------------------------------------------------
+
+def test_deadline_mode_converges_with_slow_edge(inst):
+    """One 20x straggler: the master proceeds on stale blocks and the
+    solution still lands on the unencrypted ADMM reference."""
+    cfg = _cfg(iters=40, deadline=1.0,
+               latency_fn=lambda k, t: 2.0 if (k == 1 and t % 3 == 0)
+               else 0.1)
+    r = run_on_runtime(inst.A, inst.y, cfg)
+    assert r.stale_events > 0
+    x_ref, _ = admm.distributed_admm(jnp.asarray(inst.A),
+                                     jnp.asarray(inst.y), 3,
+                                     admm.ADMMConfig(lam=0.05, iters=40))
+    assert float(np.max(np.abs(r.x - np.asarray(x_ref)))) < 0.5
+
+
+def test_deadline_mode_matches_legacy_inline_semantics(inst):
+    """The runtime reproduces the retired inline straggler hack exactly:
+    stale blocks reuse the cached (x-hat, w-sum) pair of the round that
+    produced them, so the history is bit-identical to the historical
+    implementation's (regression-pinned via the sync run's blocks)."""
+    slow = lambda k, t: 2.0 if (k == 1 and t % 2 == 1) else 0.0
+    cfg = _cfg(iters=6, deadline=1.0, latency_fn=slow)
+    r = run_on_runtime(inst.A, inst.y, cfg)
+    sync = run_on_runtime(inst.A, inst.y, _cfg(iters=6))
+    # even iterations are on time for everyone and (because edge 1's stale
+    # block matches what it would have computed one round earlier) the
+    # non-straggling edges' blocks always match the sync run
+    Nk = 48 // 3
+    for t in range(6):
+        for k in (0, 2):
+            assert np.array_equal(r.history[t, k * Nk:(k + 1) * Nk],
+                                  sync.history[t, k * Nk:(k + 1) * Nk]), \
+                (t, k)
+    assert r.stale_events == 3   # t = 1, 3, 5
+
+
+def test_deadline_waits_for_edge_with_no_cache(inst):
+    """An edge that is late on iteration 0 has no stale block to use —
+    the master must block on it (and does not count it stale)."""
+    cfg = _cfg(iters=1, deadline=0.5,
+               latency_fn=lambda k, t: 3.0 if k == 2 else 0.01)
+    r = run_on_runtime(inst.A, inst.y, cfg)
+    assert r.stale_events == 0
+    ref = run_on_runtime(inst.A, inst.y, _cfg(iters=1))
+    assert np.array_equal(r.history, ref.history)
+
+
+def test_tiny_deadline_without_latency_fn_keeps_advancing(inst):
+    """A cutoff shorter than the physical round-trip: bounded staleness
+    (stale_limit) forces periodic barriers, so the iterate lags a few
+    rounds but never freezes on one old block."""
+    r = run_on_runtime(inst.A, inst.y, _cfg(iters=30, deadline=1e-6))
+    assert r.stale_events > 0
+    sync = run_on_runtime(inst.A, inst.y, _cfg(iters=30))
+    assert not np.array_equal(r.history[5], r.history[29])  # not frozen
+    # trails the sync trajectory by <= stale_limit rounds, no further
+    assert float(np.max(np.abs(r.x - sync.x))) < 0.5
+    assert any(float(np.max(np.abs(r.x - sync.history[t]))) < 0.2
+               for t in range(24, 30))
+
+
+def test_run_protocol_delegates_deadline_to_runtime(inst):
+    """The public straggler knob survives on ProtocolConfig but now runs
+    on the runtime (stats carry the runtime section)."""
+    cfg = _cfg(iters=4, deadline=1.0, latency_fn=lambda k, t: 0.0)
+    r = protocol.run_protocol(inst.A, inst.y, cfg)
+    assert "runtime" in r.stats
+    assert r.stats["runtime"]["mode"] == "deadline"
+
+
+# ---------------------------------------------------------------------------
+# lossy links
+# ---------------------------------------------------------------------------
+
+def test_lossy_links_recover_and_account_retransmits(inst):
+    link = LinkModel(drop_prob=0.2, timeout_s=2e-3)
+    cfg = _cfg(iters=4, seed=7)
+    r = run_on_runtime(inst.A, inst.y, cfg, link=link)
+    ref = protocol.run_protocol(inst.A, inst.y, cfg)
+    assert np.array_equal(r.history, ref.history)   # losses delay, not corrupt
+    assert r.stats["runtime"]["retransmits"] > 0
+    # logical traffic unchanged; the retries only show up per-link
+    assert r.stats["traffic_bytes"] == ref.stats["traffic_bytes"]
+    link_total = sum(r.stats["runtime"]["link_bytes"].values())
+    assert link_total > sum(r.stats["traffic_bytes"].values())
