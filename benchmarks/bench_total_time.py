@@ -2,9 +2,12 @@
 
 Paper compares Cen.-ADMM, Dis.-ADMM, CPU-Dis.-ADMM (CPU enc/dec) and the
 GPU-accelerated 3P-ADMM-PC2. Here: measured per-phase wall times at reduced
-scale (M=120, N=240, K=3) with real crypto — ``gold`` = the CPU-int path,
-``vec`` = the batched limb path (the accelerated EP design). T_comm from the
-measured byte counts over the paper's LAN model (1 Gb/s, 1 ms RTT).
+scale (M=120, N=240, K=3) with real crypto — ``gold`` = the SCALAR CPU-int
+path (``gold_batch=False``: this row models the paper's CPU baseline, so
+the batched CRT fast path must stay off), ``vec`` = the batched limb path
+(the accelerated EP design; the batched-vs-scalar gold comparison itself is
+bench_topology's ``gold_fastpath`` section). T_comm from the measured byte
+counts over the paper's LAN model (1 Gb/s, 1 ms RTT).
 """
 from __future__ import annotations
 
@@ -55,7 +58,8 @@ def run(rows: list, M: int = 120, N: int = 240, K: int = 3,
         for bits in bits_list:
             cfg = protocol.ProtocolConfig(K=K, lam=lam, iters=it,
                                           spec=spec, cipher=cipher,
-                                          key_bits=bits, seed=0)
+                                          key_bits=bits, seed=0,
+                                          gold_batch=False)
             t0 = time.perf_counter()
             r = protocol.run_protocol(inst_i.A, inst_i.y, cfg)
             wall = time.perf_counter() - t0

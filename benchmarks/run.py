@@ -2,15 +2,9 @@
 
 ``python -m benchmarks.run [--only fig6,tab2,...]`` prints
 ``name,us_per_call,derived`` CSV rows (and tees them per-bench as it goes).
-
-  fig5  bench_quant        quantization precision loss vs Delta
-  fig6  bench_mse          MSE: Cen/Dis/DP/3P (+beyond-paper variants)
-  fig7  bench_sparsity     sparsity x edge-count sweep
-  tab2  bench_throughput   ModMult/ModExp/EP OPS by key length
-  fig8  bench_total_time   T_pre/T_total by scheme and key length
-  tab345 bench_latency     per-node latency decomposition
-  fig10 bench_power_grid   power-network reconstruction AUROC/AUPRC
-  topo  bench_topology     topology x edge-count runtime sweep
+``--help`` / ``--list`` show every registered bench; benchmarks/README.md
+documents what each one reproduces, its expected runtime and its output
+schema.
 """
 from __future__ import annotations
 
@@ -18,30 +12,61 @@ import argparse
 import sys
 import time
 
+# (key, module, one-line description) — the registry of record; --help and
+# --list render it, and tests/test_docs.py asserts benchmarks/README.md
+# documents every key.
 BENCHES = [
-    ("fig5", "bench_quant"),
-    ("fig6", "bench_mse"),
-    ("fig7", "bench_sparsity"),
-    ("tab2", "bench_throughput"),
-    ("fig8", "bench_total_time"),
-    ("tab345", "bench_latency"),
-    ("fig10", "bench_power_grid"),
-    ("roofline", "bench_roofline"),
-    ("topo", "bench_topology"),
+    ("fig5", "bench_quant",
+     "quantization precision loss vs Delta (paper Fig. 5)"),
+    ("fig6", "bench_mse",
+     "MSE: Cen/Dis/DP/3P-ADMM (+beyond-paper variants) (Fig. 6)"),
+    ("fig7", "bench_sparsity",
+     "sparsity x edge-count convergence sweep (Fig. 7)"),
+    ("tab2", "bench_throughput",
+     "ModMult/ModExp/EP throughput by key length (Table II)"),
+    ("fig8", "bench_total_time",
+     "T_pre / T_total by scheme and key length (Fig. 8)"),
+    ("tab345", "bench_latency",
+     "per-node latency decomposition (Tables III-V)"),
+    ("fig10", "bench_power_grid",
+     "power-network reconstruction AUROC/AUPRC (Fig. 10)"),
+    ("roofline", "bench_roofline",
+     "roofline rows from the dry-run report (deliverable g)"),
+    ("topo", "bench_topology",
+     "topology x K sweep (K<=128) + batched-gold speedup (beyond-paper)"),
 ]
 
 
+def _registry_lines() -> list[str]:
+    return [f"  {key:<9} {mod:<18} {desc}" for key, mod, desc in BENCHES]
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="comma-separated bench keys (fig5,tab2,...)")
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        description="Run the paper-reproduction benchmark suite.",
+        epilog="registered benches (see benchmarks/README.md for what each\n"
+               "reproduces, expected runtimes and output schemas):\n\n"
+               + "\n".join(_registry_lines()))
+    ap.add_argument("--only", default=None, metavar="KEYS",
+                    help="comma-separated bench keys, e.g. fig5,tab2,topo")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered bench keys and exit")
     args = ap.parse_args()
+    if args.list:
+        print("\n".join(_registry_lines()))
+        return
     want = set(args.only.split(",")) if args.only else None
+    unknown = (want or set()) - {k for k, _, _ in BENCHES}
+    if unknown:
+        ap.error(f"unknown bench keys {sorted(unknown)} "
+                 f"(--list shows the registry)")
 
     import importlib
     rows: list[str] = ["name,us_per_call,derived"]
     print(rows[0])
-    for key, mod_name in BENCHES:
+    for key, mod_name, _ in BENCHES:
         if want and key not in want:
             continue
         mod = importlib.import_module(f"benchmarks.{mod_name}")

@@ -1,0 +1,68 @@
+"""Markdown link lint: every in-repo link in every *.md must resolve.
+
+CI runs ``python -m scripts.check_links`` from the repo root (the docs-lint
+step in .github/workflows/ci.yml) so docs/ can't rot: a moved module, a
+renamed benchmark or a deleted doc breaks the build instead of silently
+breaking the docs.
+
+Checked: relative ``[text](target)`` links, including reference-style
+``[text]: target`` definitions; ``#anchor`` fragments are stripped (files
+are checked for existence, not heading structure).  Skipped: absolute URLs
+(http/https/mailto) and pure in-page ``#anchors``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+INLINE_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REF_DEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", "node_modules",
+             ".claude"}
+
+
+def iter_md_files(root: pathlib.Path):
+    for path in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.name for p in path.parents):
+            yield path
+
+
+def check_file(md: pathlib.Path, root: pathlib.Path) -> list[str]:
+    text = md.read_text(encoding="utf-8")
+    errors = []
+    targets = INLINE_LINK.findall(text) + REF_DEF.findall(text)
+    for target in targets:
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if rel.startswith("/"):
+            dest = root / rel.lstrip("/")
+        else:
+            dest = md.parent / rel
+        if not dest.exists():
+            errors.append(f"{md.relative_to(root)}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path(argv[0]) if argv else pathlib.Path.cwd()
+    root = root.resolve()
+    errors: list[str] = []
+    n_files = 0
+    for md in iter_md_files(root):
+        n_files += 1
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {n_files} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,8 +11,23 @@ Note: the paper defines L(x) = (x-1)/2 (§III-B) which is a typo for the
 standard Paillier L(x) = (x-1)/n — decryption does not round-trip otherwise;
 we implement the standard definition (documented in DESIGN.md §2).
 
-This module is the correctness oracle for the batched JAX/Pallas path
-(core/paillier_vec.py + kernels/): every vectorized op is tested against it.
+Role in the pipeline: this module is the SCALAR REFERENCE — every function
+here computes one element at a time with Python-int ``pow`` and is the
+correctness oracle the batched fast paths are tested against:
+
+  * ``core/paillier_vec.py`` — in-graph limb-array ciphertexts (int64
+    plaintexts), the ``vec`` cipher;
+  * ``core/paillier_batch.py`` — int-in/int-out batched CRT fast path used
+    by the ``gold`` cipher box for batches >= 8 (same ciphertext values,
+    same rng stream, no per-element ``pow``).
+
+Both fast paths run on the ``kernels/`` big-integer kernels: public limb
+radix 2^16 (``core/bigint.py`` layout), kernel-internal radix 2^8, ModExp
+via a 4-bit fixed window by default (``REPRO_MODEXP_METHOD=binary`` for the
+paper's Algorithm-2-style ladder).  Scalar functions below (``encrypt``,
+``decrypt``, ``modexp_crt``, ``c_mul_const``, vector conveniences
+``encrypt_vec``/``decrypt_vec``/``make_r_pool``) stay pow-based on purpose:
+they are the gold oracle, not the hot path.
 """
 from __future__ import annotations
 

@@ -1,0 +1,256 @@
+"""Batched CRT fast path for the gold (Python-int) Paillier pipeline.
+
+The scalar gold path (``core.paillier``) computes one Python-int ``pow`` per
+scalar — the ROADMAP-named blocker for larger-N topology sweeps.  This module
+removes every per-element ``pow`` from the protocol hot path: a whole batch
+of ModExps is lowered onto the radix-2^16 limb kernels (``kernels/ops.py``,
+4-bit fixed-window exponentiation by default) in the paper's two CRT
+half-width spaces Z_{p^2} x Z_{q^2} (eqs. 35-40), and the eq. (38)
+recombination is done ONCE per batch in limb space
+(:func:`paillier_vec.crt_combine_batch`).
+
+Unlike ``core.paillier_vec`` — whose ciphertexts live as limb arrays inside
+the JAX graph and whose plaintexts must fit int64 — this module keeps the
+gold representation (Python ints in, Python ints out, arbitrary plaintext
+size < n), so :class:`~repro.core.protocol.GoldBox`, ``secure_agg`` and the
+runtime's coalescing queue can adopt the batched kernels without changing
+their ciphertext wire format.  Remaining per-element host work is limited to
+cheap ring ops (``%``, ``*``, exact division) and the int<->limb conversion;
+no ``pow`` survives.
+
+Bit-exactness: every function here returns exactly what the scalar gold
+functions return for the same inputs and the same ``random.Random`` stream
+(property-tested in tests/test_paillier_batch.py across key sizes).
+
+Preconditions shared by all batched ModExps: bases must be units mod n
+(ciphertexts and blinding factors are, by construction) — required for the
+half-space exponent reduction ``e mod phi(p^2)`` to be exact.  Negative
+exponents are handled exactly as CPython's ``pow``: the base is inverted
+mod n^2 host-side (extended gcd, not a ModExp) and the ladder runs on
+``-e`` — so quantized values that dip below the clipping range keep
+producing bit-identical results to the scalar loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import random
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import bigint as bi
+from . import paillier as gold
+from . import paillier_vec as pv
+from ..kernels import ops
+
+# Below this batch size the per-launch overhead dominates and callers keep
+# the scalar gold path (the protocol boxes apply this threshold).
+BATCH_MIN = 8
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BatchKey:
+    """Gold key + the limb-packed material the kernels need."""
+    key: gold.PaillierKey
+    vk: pv.VecKey
+
+
+@functools.lru_cache(maxsize=None)
+def make_batch_key(key: gold.PaillierKey) -> BatchKey:
+    """Limb-pack ``key`` (cached: repeated boxes share one kernel cache).
+
+    Unbounded on purpose: ``paillier_vec._JIT_CACHE`` keys its compiled
+    closures by ``id(vk)``, so evicting a BatchKey could free its VecKey
+    and let a later allocation reuse the address — silently serving jitted
+    kernels closed over the WRONG key's constants.  The jit cache already
+    pins per-key executables for the process lifetime, so pinning the few
+    KB of VecKey constants alongside adds nothing asymptotically.
+    """
+    return BatchKey(key=key, vk=pv.make_vec_key(key))
+
+
+def rand_r_vec(key: gold.PaillierKey, count: int,
+               rng: random.Random) -> list[int]:
+    """``count`` blinding units r in Z*_n — same stream as repeated
+    :func:`gold.rand_r`, so batched and scalar encryption draw identical r
+    sequences (this is what makes the fast path ciphertext-identical)."""
+    return [gold.rand_r(key, rng) for _ in range(count)]
+
+
+# ---------------------------------------------------------------------------
+# Core primitive: batched base^e mod n^2 via the CRT half spaces
+# ---------------------------------------------------------------------------
+
+def _norm_exps(exps, batch: int) -> list[int]:
+    if isinstance(exps, (int, np.integer)):
+        exps = [int(exps)] * batch
+    else:
+        exps = [int(e) for e in exps]
+    if len(exps) != batch:
+        raise ValueError(f"{len(exps)} exponents for a batch of {batch}")
+    return exps
+
+
+def modexp_crt_limbs(bk: BatchKey, bases: Sequence[int], exps,
+                     backend: str | None = None) -> jnp.ndarray:
+    """[b^e mod n^2] as (B, L16(n^2)) limbs; ``exps`` scalar or per-element.
+
+    The two half-space ModExp launches size their exponent limbs to the
+    batch maximum AFTER the phi reduction, so small exponents (quantized
+    Gamma_2 values, ~20 bits) pay for ~2 limbs, not the full key width.
+    """
+    key, vk = bk.key, bk.vk
+    B = len(bases)
+    bases = [int(b) for b in bases]
+    exps = _norm_exps(exps, B)
+    for i, e in enumerate(exps):
+        if e < 0:   # pow()-compatible: invert the base (egcd), negate e
+            bases[i] = pow(bases[i], -1, key.n2)
+            exps[i] = -e
+    ep = [e % key.phi_p2 for e in exps]
+    eq = [e % key.phi_q2 for e in exps]
+    le = max(1, max(bi.n_limbs_for(e) for e in ep + eq))
+    bp = bi.from_ints([b % key.p2 for b in bases], vk.pack_p2.L16)
+    bq = bi.from_ints([b % key.q2 for b in bases], vk.pack_q2.L16)
+
+    def body(bp, ep, bq, eq):
+        # the whole half-space ladder + eq. (38) recombination compiles to
+        # ONE executable per (batch, exponent-width) shape — running the
+        # combine eagerly costs ~10x in per-op dispatch
+        xp = ops.modexp(bp, ep, vk.pack_p2, backend=backend)
+        xq = ops.modexp(bq, eq, vk.pack_q2, backend=backend)
+        return pv.crt_combine_batch(vk, xp, xq, backend=backend)
+
+    fn = pv._cached_jit(vk, f"crt_modexp_{backend}", body)
+    return fn(jnp.asarray(bp), jnp.asarray(bi.from_ints(ep, le)),
+              jnp.asarray(bq), jnp.asarray(bi.from_ints(eq, le)))
+
+
+def modexp_crt_vec(bk: BatchKey, bases: Sequence[int], exps,
+                   backend: str | None = None) -> list[int]:
+    """Int-in/int-out batched ``pow(b, e, n^2)`` (see modexp_crt_limbs)."""
+    if not len(bases):
+        return []
+    return bi.to_ints(modexp_crt_limbs(bk, bases, exps, backend=backend))
+
+
+def pow_c_vec(bk: BatchKey, cs: Sequence[int], ks,
+              backend: str | None = None) -> list[int]:
+    """Batched plaintext-constant multiply ⊗: [c^k mod n^2] elementwise.
+
+    Bit-exact vs. scalar :func:`gold.c_mul_const` / ``c_mul_const_crt``
+    (requires the private key holder, as all CRT-decomposed ops do).
+    """
+    return modexp_crt_vec(bk, cs, ks, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Encryption / decryption / homomorphic matvec
+# ---------------------------------------------------------------------------
+
+def enc_vec(bk: BatchKey, ms, rng: random.Random,
+            backend: str | None = None) -> list[int]:
+    """Batched g=n+1 encryption: one kernel launch for all r^n blindings.
+
+    Draws r exactly like the scalar loop (same rng stream), computes the
+    whole batch's r^n mod n^2 in the CRT half spaces, and finishes with
+    per-element ring multiplies.  Bit-identical to
+    ``[gold.encrypt_crt(key, m, rand_r(key, rng)) for m in ms]`` —
+    including for plaintexts outside [0, n), which ``encrypt_crt`` (unlike
+    ``encrypt``) wraps mod n via (n+1)^m = 1 + (m mod n) n  (mod n^2).
+    """
+    key = bk.key
+    if key.g != key.n + 1:
+        raise NotImplementedError("batched path uses the g = n+1 fast path")
+    ms = [int(m) for m in np.asarray(ms, dtype=object).reshape(-1)]
+    rs = rand_r_vec(key, len(ms), rng)
+    rn = modexp_crt_vec(bk, rs, key.n, backend=backend)
+    return [(1 + m * key.n) % key.n2 * rni % key.n2
+            for m, rni in zip(ms, rn)]
+
+
+def rn_pool_limbs(bk: BatchKey, rs: Sequence[int],
+                  backend: str | None = None) -> jnp.ndarray:
+    """Blinding pool r -> r^n mod n^2 as (B, L16(n^2)) limbs.
+
+    The batched replacement for :func:`gold.make_r_pool` on the ``vec``
+    cipher path (which needs the pool in limb form anyway).
+    """
+    return modexp_crt_limbs(bk, rs, bk.key.n, backend=backend)
+
+
+def dec_vec(bk: BatchKey, cs: Sequence[int],
+            backend: str | None = None) -> list[int]:
+    """Batched decryption: c^lam for the whole batch in one CRT launch.
+
+    The L(x) = (x-1)/n exact division and the mu multiply stay on the host
+    (one divmod + one mulmod per element — no pow).  Bit-identical to
+    ``[gold.decrypt_crt(key, c) for c in cs]``.
+    """
+    key = bk.key
+    x = modexp_crt_vec(bk, cs, key.lam, backend=backend)
+    return [(xi - 1) // key.n * key.mu % key.n for xi in x]
+
+
+def matvec_many(bk: BatchKey, Ks, cs_list: Sequence[Sequence[int]],
+                backend: str | None = None) -> list[list[int]]:
+    """Fused homomorphic matvecs: out[b][i] = prod_j cs[b][j]^{Ks[b,i,j]}.
+
+    All B*(M, N) exponent blocks flatten into ONE batched CRT ModExp launch
+    (the coalesced form used by the runtime's queue), then one shared
+    log-depth mulmod tree reduces the rows mod n^2.  With B=1 this is the
+    gold box's per-edge eq. (13) matvec.  Each ciphertext converts to limbs
+    once (B*N host conversions); the M-fold duplication across matrix rows
+    happens in-graph via broadcast — except under negative exponents, where
+    per-element base inversion forces the general per-element path.
+    """
+    key, vk = bk.key, bk.vk
+    Ks = np.asarray(Ks, dtype=object)
+    B, M, N = Ks.shape
+    rows: list[int] = []
+    for b in range(B):
+        row = [int(c) for c in cs_list[b]]
+        if len(row) != N:
+            raise ValueError(f"ciphertext vector {b} has {len(row)} != {N}")
+        rows.extend(row)
+    exps = _norm_exps(Ks.reshape(-1), B * M * N)
+    if any(e < 0 for e in exps):
+        bases = [rows[b * N + j] for b in range(B)
+                 for _ in range(M) for j in range(N)]
+        powed = modexp_crt_limbs(bk, bases, exps, backend=backend)
+    else:
+        ep = [e % key.phi_p2 for e in exps]
+        eq = [e % key.phi_q2 for e in exps]
+        le = max(1, max(bi.n_limbs_for(e) for e in ep + eq))
+        bp = bi.from_ints([c % key.p2 for c in rows], vk.pack_p2.L16)
+        bq = bi.from_ints([c % key.q2 for c in rows], vk.pack_q2.L16)
+
+        def powed_body(bp, ep, bq, eq):
+            def bcast(x):
+                x = x.reshape(-1, 1, N, x.shape[-1])
+                x = jnp.broadcast_to(x, (x.shape[0], M, N, x.shape[-1]))
+                return x.reshape(-1, x.shape[-1])
+            xp = ops.modexp(bcast(bp), ep, vk.pack_p2, backend=backend)
+            xq = ops.modexp(bcast(bq), eq, vk.pack_q2, backend=backend)
+            return pv.crt_combine_batch(vk, xp, xq, backend=backend)
+
+        powed = pv._cached_jit(vk, f"crt_mv_{backend}_{M}_{N}", powed_body)(
+            jnp.asarray(bp), jnp.asarray(bi.from_ints(ep, le)),
+            jnp.asarray(bq), jnp.asarray(bi.from_ints(eq, le)))
+    L2 = vk.pack_n2.L16
+
+    def tree(powed):
+        return pv.mul_tree(vk, powed.reshape(-1, N, L2), backend=backend)
+
+    out = pv._cached_jit(vk, f"crt_matvec_tree_{backend}_{N}", tree)(powed)
+    ints = bi.to_ints(out)
+    return [ints[b * M:(b + 1) * M] for b in range(B)]
+
+
+def matvec_vec(bk: BatchKey, K, cs: Sequence[int],
+               backend: str | None = None) -> list[int]:
+    """Single homomorphic matvec (M, N) x (N,) -> (M,), batched kernels."""
+    K = np.asarray(K, dtype=object)
+    return matvec_many(bk, K[None], [list(cs)], backend=backend)[0]

@@ -121,9 +121,14 @@ def encrypt_batch(vk: VecKey, m: jax.Array, rn_limbs: jax.Array,
 # Decryption: m = L(c^lam mod n^2) * mu mod n, ModExp via CRT half-spaces
 # ---------------------------------------------------------------------------
 
-def _crt_combine_batch(vk: VecKey, xp: jax.Array, xq: jax.Array,
-                       backend: str | None = None) -> jax.Array:
-    """x' (B, Lp2), x'' (B, Lq2) -> x (B, Ln2) per eq. (38)."""
+def crt_combine_batch(vk: VecKey, xp: jax.Array, xq: jax.Array,
+                      backend: str | None = None) -> jax.Array:
+    """x' (B, Lp2), x'' (B, Lq2) -> x (B, Ln2) per eq. (38).
+
+    Shared by the in-graph decryption below and the int-in/int-out gold
+    fast path (``core.paillier_batch``): one recombination per batch, done
+    entirely in limb space (no per-element Python arithmetic).
+    """
     B = xp.shape[0]
     Lq = vk.pack_q2.L16
     L2 = vk.pack_n2.L16
@@ -178,7 +183,7 @@ def _decrypt_impl(vk: VecKey, c_limbs: jax.Array,
                     vk.pack_p2, backend=backend)
     xq = ops.modexp(cq, jnp.broadcast_to(jnp.asarray(vk.lam_q), (B, le)),
                     vk.pack_q2, backend=backend)
-    x = _crt_combine_batch(vk, xp, xq, backend=backend)   # c^lam mod n^2
+    x = crt_combine_batch(vk, xp, xq, backend=backend)    # c^lam mod n^2
     # alpha = (x - 1) / n  — exact division, multiplicative
     Ln = vk.pack_n.L16
     k_limbs = Ln + 1
@@ -261,15 +266,25 @@ def _c_matvec_impl(vk: VecKey, K: jax.Array, c_vec: jax.Array,
         jnp.broadcast_to(c_vec[None, :, :], (M, N, L2)).reshape(M * N, L2),
         int64_to_limbs(K.reshape(-1), exp_limbs),
         vk.pack_n2, backend=backend).reshape(M, N, L2)
-    # log-tree product over j
-    cur = powed
-    n_cur = N
+    return mul_tree(vk, powed, backend=backend)
+
+
+def mul_tree(vk: VecKey, cur: jax.Array, backend: str | None = None
+             ) -> jax.Array:
+    """Log-depth batched ciphertext product over axis 1: (R, N, L) -> (R, L).
+
+    Each round halves N with one batched mulmod launch mod n^2; exact
+    modular arithmetic makes the tree association bit-transparent vs. a
+    sequential fold.  Shared by :func:`c_matvec`, the runtime's coalesced
+    ``c_matvec_many`` and the gold fast path's homomorphic matvec.
+    """
+    R, n_cur, L2 = cur.shape
     while n_cur > 1:
         half = n_cur // 2
         a = cur[:, :half]
         b = cur[:, half:2 * half]
-        prod = ops.mulmod(a.reshape(M * half, L2), b.reshape(M * half, L2),
-                          vk.pack_n2, backend=backend).reshape(M, half, L2)
+        prod = ops.mulmod(a.reshape(R * half, L2), b.reshape(R * half, L2),
+                          vk.pack_n2, backend=backend).reshape(R, half, L2)
         if n_cur % 2:
             prod = jnp.concatenate([prod, cur[:, -1:]], axis=1)
             n_cur = half + 1

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 
 from . import admm as admm_mod
 from . import paillier as gold
+from . import paillier_batch as pb
 from . import paillier_vec as pv
 from . import bigint as bi
 from .quantization import QuantSpec, gamma1, gamma2, dequantize_theorem1
@@ -98,23 +99,53 @@ class PlainBox:
 
 
 class GoldBox:
-    """Python-int Paillier; optional Algorithm-3 collaborative split."""
+    """Python-int Paillier; optional Algorithm-3 collaborative split.
+
+    Batches of ``batch_min`` (default 8) or more elements route through the
+    batched CRT fast path (``core.paillier_batch``): the ModExps of a whole
+    enc/dec/matvec call run as one limb-kernel launch and no per-element
+    Python ``pow`` executes.  ``batch=False`` keeps the scalar loops — the
+    bit-exactness reference the fast path is property-tested against —
+    and so does ``crt=False``, since the fast path IS the CRT
+    decomposition and must not stand in for the direct (non-CRT)
+    reference.  Ciphertexts are identical either way (same rng stream,
+    same values).
+    """
 
     name = "gold"
 
     def __init__(self, key: gold.PaillierKey, rng: random.Random,
-                 crt: bool = True, counter=None):
+                 crt: bool = True, counter=None, batch: bool = True,
+                 batch_min: int | None = None,
+                 kernel_backend: str | None = None):
         self.key = key
         self.rng = rng
         self.crt = crt
         self.counter = counter or OpCounter()
+        self.batch = batch
+        self.batch_min = pb.BATCH_MIN if batch_min is None else batch_min
+        self.kernel_backend = kernel_backend
+        self._bk: pb.BatchKey | None = None
+
+    def batch_key(self) -> pb.BatchKey:
+        if self._bk is None:
+            self._bk = pb.make_batch_key(self.key)
+        return self._bk
 
     def encrypt(self, m: np.ndarray) -> list[int]:
+        flat = np.asarray(m).reshape(-1)
+        self.counter.bump("enc", flat.size)
+        # batched enc implements encrypt_crt's semantics (m wraps mod n),
+        # so it only stands in for the crt=True scalar loop — crt=False
+        # means gold.encrypt, whose out-of-range ValueError must not
+        # appear and disappear with the batch size
+        if self.batch and self.crt and flat.size >= self.batch_min \
+                and self.key.g == self.key.n + 1:
+            return pb.enc_vec(self.batch_key(), flat, self.rng,
+                              backend=self.kernel_backend)
         enc = gold.encrypt_crt if self.crt else gold.encrypt
-        out = [enc(self.key, int(x), gold.rand_r(self.key, self.rng))
-               for x in np.asarray(m).reshape(-1)]
-        self.counter.bump("enc", len(out))
-        return out
+        return [enc(self.key, int(x), gold.rand_r(self.key, self.rng))
+                for x in flat]
 
     def add(self, c1, c2):
         self.counter.bump("mulmod", len(c1))
@@ -125,6 +156,9 @@ class GoldBox:
         M, N = Km.shape
         self.counter.bump("modexp", M * N)
         self.counter.bump("mulmod", M * (N - 1))
+        if self.batch and self.crt and M * N >= self.batch_min:
+            return pb.matvec_vec(self.batch_key(), Km, c,
+                                 backend=self.kernel_backend)
         out = []
         for i in range(M):
             acc = 1
@@ -134,9 +168,13 @@ class GoldBox:
         return out
 
     def decrypt(self, c) -> np.ndarray:
-        dec = gold.decrypt_crt if self.crt else gold.decrypt
         self.counter.bump("dec", len(c))
-        vals = [dec(self.key, x) for x in c]
+        if self.batch and self.crt and len(c) >= self.batch_min:
+            vals = pb.dec_vec(self.batch_key(), c,
+                              backend=self.kernel_backend)
+        else:
+            dec = gold.decrypt_crt if self.crt else gold.decrypt
+            vals = [dec(self.key, x) for x in c]
         return np.array(vals, dtype=object)
 
     def ct_bytes(self, n_el: int) -> int:
@@ -150,7 +188,10 @@ class VecBox:
 
     def __init__(self, key: gold.PaillierKey, rng: random.Random,
                  backend: str | None = None, counter=None):
-        self.vk = pv.make_vec_key(key)
+        # share the limb-packed key (and thus the per-VecKey jit caches)
+        # with any GoldBox over the same key via the make_batch_key cache
+        self._bk = pb.make_batch_key(key)
+        self.vk = self._bk.vk
         self.key = key
         self.rng = rng
         self.backend = backend
@@ -158,8 +199,14 @@ class VecBox:
 
     def encrypt(self, m: np.ndarray):
         m = np.asarray(m).reshape(-1)
-        pool = gold.make_r_pool(self.key, len(m), self.rng)
-        rn = jnp.asarray(bi.from_ints(pool, self.vk.pack_n2.L16))
+        if len(m) >= pb.BATCH_MIN:
+            # r^n blinding pool batched through the CRT limb kernels (one
+            # launch) instead of per-element Python pow (make_r_pool)
+            rs = pb.rand_r_vec(self.key, len(m), self.rng)
+            rn = pb.rn_pool_limbs(self._bk, rs, backend=self.backend)
+        else:
+            pool = gold.make_r_pool(self.key, len(m), self.rng)
+            rn = jnp.asarray(bi.from_ints(pool, self.vk.pack_n2.L16))
         self.counter.bump("enc", len(m))
         return pv.encrypt_batch(self.vk, jnp.asarray(m.astype(np.int64)), rn,
                                 backend=self.backend)
@@ -212,7 +259,10 @@ class ProtocolConfig:
     key_bits: int = 256
     crt: bool = True
     collaborative: bool = False        # Algorithm 3 master/edge CRT split
-    kernel_backend: str | None = None  # vec cipher kernel backend
+    kernel_backend: str | None = None  # vec/gold-batch cipher kernel backend
+    gold_batch: bool = True            # gold cipher: batched CRT fast path
+    #   (False = per-element scalar reference; bench_topology records the
+    #   measured speedup between the two)
     y_scale: str = "consistent"
     seed: int = 0
     # straggler knobs — handled by the runtime's deadline mode. Setting a
@@ -310,7 +360,9 @@ def make_box(cfg: ProtocolConfig, n_dim: int, rng: random.Random,
     key = gold.keygen(cfg.key_bits, rng, g=None)
     check_plaintext_fits(key, cfg.spec, n_dim)
     if cfg.cipher == "gold":
-        return GoldBox(key, rng, crt=cfg.crt, counter=counter), key
+        return GoldBox(key, rng, crt=cfg.crt, counter=counter,
+                       batch=cfg.gold_batch,
+                       kernel_backend=cfg.kernel_backend), key
     if cfg.cipher == "vec":
         return VecBox(key, rng, backend=cfg.kernel_backend,
                       counter=counter), key

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from . import paillier as gold
+from . import paillier_batch as pb
 from .quantization import QuantSpec
 
 
@@ -112,6 +113,13 @@ def paillier_aggregate(blocks: Sequence[np.ndarray], key: gold.PaillierKey,
     Kn = len(blocks)
     n_el = blocks[0].size
     s = spec.span
+    # worker batches of >= BATCH_MIN elements ride the batched CRT fast
+    # path (one kernel launch per block, no per-element pow); tiny blocks
+    # keep the scalar loops — both are bit-identical for the same rng.
+    # crt=False means gold.encrypt semantics (strict [0, n) range check),
+    # which the batched path (encrypt_crt semantics) must not replace.
+    batched = n_el >= pb.BATCH_MIN and crt and key.g == key.n + 1
+    bk = pb.make_batch_key(key) if batched else None
     enc = gold.encrypt_crt if crt else gold.encrypt
     dec = gold.decrypt_crt if crt else gold.decrypt
 
@@ -119,12 +127,15 @@ def paillier_aggregate(blocks: Sequence[np.ndarray], key: gold.PaillierKey,
     for blk in blocks:
         q = np.round(spec.delta * (np.clip(blk.reshape(-1), spec.zmin, spec.zmax)
                                    - spec.zmin) / s).astype(np.int64)
-        for i, qi in enumerate(q):
-            c = enc(key, int(qi), gold.rand_r(key, rng))
+        if batched:
+            cs = pb.enc_vec(bk, q, rng)
+        else:
+            cs = [enc(key, int(qi), gold.rand_r(key, rng)) for qi in q]
+        for i, c in enumerate(cs):
             agg[i] = (agg[i] * c) % key.n2          # ⊕ accumulate
+    tots = pb.dec_vec(bk, agg) if batched else [dec(key, a) for a in agg]
     out = np.empty(n_el)
-    for i in range(n_el):
-        tot = dec(key, agg[i])
+    for i, tot in enumerate(tots):
         # sum_k (q_k s/Delta + zmin) = tot*s/Delta + K*zmin
         out[i] = tot * s / spec.delta + Kn * spec.zmin
     return out.reshape(blocks[0].shape)

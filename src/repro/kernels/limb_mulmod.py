@@ -10,6 +10,13 @@ Block layout: grid over the ciphertext batch; each program instance owns a
 ``(block_b, L)`` tile of a/b/out plus the broadcast modulus row. VMEM use is
 ~10 int32 buffers of (block_b, 2L+2): for block_b=128, L=512 (4096-bit n^2)
 that is ~5.5 MB — comfortably under the ~16 MB v5e VMEM budget.
+
+Layout: little-endian radix-256 (2^8) int32 limbs kernel-side; the public
+API (``kernels/ops.py``, ``core/bigint.py``) uses radix-2^16 limbs and
+converts at the boundary. This is a building block of the batched fast path
+(no exponentiation here — see ``kernels/modexp.py`` for the 4-bit-window
+ladder); its scalar reference is plain Python-int arithmetic in
+``core/paillier.py`` and the jnp oracle in ``kernels/ref.py``.
 """
 from __future__ import annotations
 

@@ -6,6 +6,15 @@ binary ladder — ``2 * exp_bits`` fused mulmods — runs inside one pallas_call
 so the running result/base pair never leaves VMEM. Exponents are per-element
 (each plaintext/ciphertext has its own), and the ladder is constant-time
 (select, no data-dependent branches) as required for key-dependent exponents.
+
+Layout and parameters: operands are little-endian radix-256 (2^8) int32
+limbs (callers in ``kernels/ops.py`` convert from the public radix-2^16
+``core/bigint`` layout). ``method="binary"`` is the Algorithm-2-style ladder
+(2 mulmods/bit); ``method="win4"`` — the default via ``ops.modexp`` — is a
+4-bit fixed-window ladder (1.25 mulmods/bit + a 16-entry table, oblivious
+select). This module is the batched FAST PATH; the scalar reference it is
+tested against is the Python-int gold path in ``core/paillier.py`` (plus
+the jnp oracle ``kernels/ref.py`` sharing the same helpers).
 """
 from __future__ import annotations
 

@@ -10,7 +10,9 @@ boundary (``tick_s`` of virtual time), then :meth:`flush` groups them by
   gold/plain call), and split back;
 * same-shaped ``matvec`` groups on the vec backend go through
   :func:`c_matvec_many`, which flattens all K ``(M, N)`` ModExp blocks
-  into one kernel launch and shares the log-tree row reduction.
+  into one kernel launch and shares the log-tree row reduction; on the
+  gold backend the same fusion runs through the batched CRT fast path
+  (``paillier_batch.matvec_many`` — Python ints in/out, one launch).
 
 Because the underlying ops are exact modular arithmetic, coalescing is
 bit-transparent: results and OpCounter totals are identical to issuing
@@ -29,6 +31,7 @@ from typing import Callable
 import numpy as np
 import jax.numpy as jnp
 
+from ..core import paillier_batch as pbatch
 from ..core import paillier_vec as pv
 from ..kernels import ops
 from .scheduler import Scheduler
@@ -55,21 +58,8 @@ def c_matvec_many(vk, Ks: jnp.ndarray, cs: jnp.ndarray,
         powed = ops.modexp(bases.reshape(B * M * N, L2),
                            pv.int64_to_limbs(Ks.reshape(-1), exp_limbs),
                            vk.pack_n2, backend=backend)
-        cur = powed.reshape(B * M, N, L2)
-        n_cur = N
-        while n_cur > 1:
-            half = n_cur // 2
-            a = cur[:, :half].reshape(B * M * half, L2)
-            b = cur[:, half:2 * half].reshape(B * M * half, L2)
-            prod = ops.mulmod(a, b, vk.pack_n2,
-                              backend=backend).reshape(B * M, half, L2)
-            if n_cur % 2:
-                prod = jnp.concatenate([prod, cur[:, -1:]], axis=1)
-                n_cur = half + 1
-            else:
-                n_cur = half
-            cur = prod
-        return cur[:, 0].reshape(B, M, L2)
+        out = pv.mul_tree(vk, powed.reshape(B * M, N, L2), backend=backend)
+        return out.reshape(B, M, L2)
 
     key = (id(vk), "cmv_many", backend, exp_limbs, (B, M, N))
     fn = _MATVEC_JIT.get(key)
@@ -156,10 +146,11 @@ class CoalesceQueue:
                                            key=lambda kv: repr(kv[0])):
             if self.counter is not None:
                 self.counter.phase = entries[0].phase
-            # matvec only truly fuses on the vec backend (other boxes loop
-            # per entry inside the group runner) — keep the telemetry honest
+            # matvec truly fuses on the vec backend and on the gold box's
+            # batched CRT path (other boxes loop per entry inside the group
+            # runner) — keep the telemetry honest
             fused = batchable and len(entries) > 1 and \
-                (op != "matvec" or getattr(self.box, "name", "") == "vec")
+                (op != "matvec" or self._matvec_fuses(entries))
             if not fused:
                 for e in entries:
                     e.cb(self._run_one(op, e.args))
@@ -201,12 +192,36 @@ class CoalesceQueue:
             return self._run_matvec_group(entries)
         raise ValueError(op)
 
+    def _matvec_fuses(self, entries: list[_Entry]) -> bool:
+        name = getattr(self.box, "name", "")
+        if name == "vec":
+            return True
+        if name == "gold" and getattr(self.box, "batch", False) \
+                and getattr(self.box, "crt", True):
+            # the fused path is the CRT decomposition; crt=False boxes
+            # keep their direct per-entry reference loops
+            M, N = np.asarray(entries[0].args[0]).shape
+            return len(entries) * M * N >= self.box.batch_min
+        return False
+
     def _run_matvec_group(self, entries: list[_Entry]) -> list:
-        if getattr(self.box, "name", "") != "vec":
+        name = getattr(self.box, "name", "")
+        if not self._matvec_fuses(entries):
             out = []
             for e in entries:
                 out.append(self.box.matvec(e.args[0], e.args[1]))
             return out
+        if name == "gold":
+            # one fused batched-CRT launch over every edge's (M, N) block
+            Ks = np.stack([np.asarray(e.args[0], dtype=object)
+                           for e in entries])
+            B, M, N = Ks.shape
+            if self.counter is not None:  # same totals box.matvec would bump
+                self.counter.bump("modexp", B * M * N)
+                self.counter.bump("mulmod", B * M * (N - 1))
+            return pbatch.matvec_many(self.box.batch_key(), Ks,
+                                      [e.args[1] for e in entries],
+                                      backend=self.box.kernel_backend)
         # one fused launch for all same-shaped (M, N) blocks
         vk = self.box.vk
         Ks = jnp.stack([jnp.asarray(np.asarray(e.args[0], np.int64))

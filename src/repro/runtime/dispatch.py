@@ -5,17 +5,25 @@ At startup :func:`calibrate` measures per-element seconds for each crypto
 op (enc / add / matvec / dec) on every requested backend over a
 ``key_bits x batch_size`` grid, and persists the table as JSON (default
 ``~/.cache/repro/dispatch_calib.json``, override with
-``$REPRO_CALIB_CACHE``).  Subsequent runs load the cache and skip the
+``$REPRO_CALIB_CACHE``).  Entries are keyed by the device kind that
+measured them (``cpu/gold/128/16`` — see :func:`device_kind` and
+docs/runtime.md for the cache format), so one cache file holds separate
+CPU/GPU/TPU grids and numbers from one device never price another's
+routing.  Subsequent runs on the same device load the cache and skip the
 measurement entirely.
 
 :class:`AdaptiveBox` then implements the protocol's cipher-box interface
-and routes *each call* to the cheapest backend.  ``gold`` (Python-int
-Paillier) and ``vec`` (batched limb kernels) share one key and one
-ciphertext space, so a per-op switch is just a representation change
-(ints <-> limb arrays) whose cost is part of the routing decision.
-``plain`` is calibrated too — it prices the functional-simulation path
-for the cost model — but is never mixed into an encrypted run: its
-"ciphertexts" are bare integers in a different ring.
+and routes *each call* to the cheapest backend.  ``gold`` (scalar
+Python-int Paillier), ``gold_batch`` (the batched CRT fast path —
+identical Python-int ciphertexts, so switching between the two golds is
+free) and ``vec`` (in-graph limb kernels) share one key and one
+ciphertext space, so a per-op switch is at most a representation change
+(ints <-> limb arrays) whose cost is part of the routing decision.  On a
+CPU the table typically keeps scalar ``gold``; on an accelerator the
+batched backends win — which is why entries are device-keyed.  ``plain``
+is calibrated too — it prices the functional-simulation path for the
+cost model — but is never mixed into an encrypted run: its "ciphertexts"
+are bare integers in a different ring.
 
 :class:`CostModel` turns calibration entries (or analytic defaults) into
 virtual-clock charges for the scheduler.
@@ -35,11 +43,20 @@ from ..core import bigint as bi
 from ..core import paillier as gold
 from ..core.quantization import QuantSpec
 
-TABLE_VERSION = 2   # v2: matvec calibrated with realistic Gamma_2-sized
+TABLE_VERSION = 3   # v3: entries keyed by device kind (cpu/gpu/tpu) so one
+                    # cache file holds per-device grids, and the batched
+                    # CRT fast path (paillier_batch) is calibrated as its
+                    # own "gold_batch" backend beside scalar "gold" — both
+                    # invalidate v2 numbers.
+                    # v2: matvec calibrated with realistic Gamma_2-sized
                     # exponents (v1's all-ones exponents short-circuited
                     # pow() and underpriced the gold backend ~10x)
 OPS = ("enc", "add", "matvec", "dec")
-DEFAULT_BACKENDS = ("plain", "gold", "vec")
+DEFAULT_BACKENDS = ("plain", "gold", "gold_batch", "vec")
+# which ciphertext representation each routable backend produces/consumes
+# (scalar and batched gold share the Python-int representation, so routing
+# between them is free of conversion cost)
+BACKEND_REP = {"gold": "gold", "gold_batch": "gold", "vec": "vec"}
 
 
 def cache_path() -> str:
@@ -48,8 +65,20 @@ def cache_path() -> str:
                        "~/.cache/repro/dispatch_calib.json"))
 
 
-def _entry_key(backend: str, key_bits: int, batch: int) -> str:
-    return f"{backend}/{key_bits}/{batch}"
+def device_kind() -> str:
+    """Calibration-cache device key: the active jax backend (cpu/gpu/tpu).
+
+    Throughput tables are device-specific — the limb kernels that lose to
+    Python-int pow on a CPU win on an accelerator — so entries measured on
+    one device kind must never price another's dispatch decisions.
+    """
+    import jax
+    return jax.default_backend()
+
+
+def _entry_key(backend: str, key_bits: int, batch: int,
+               device: str | None = None) -> str:
+    return f"{device or device_kind()}/{backend}/{key_bits}/{batch}"
 
 
 def _median_seconds(fn, reps: int = 3) -> float:
@@ -83,7 +112,12 @@ def _measure_backend(backend: str, key_bits: int, batch: int,
     else:
         key = gold.keygen(key_bits, rng)
         if backend == "gold":
-            box = protocol.GoldBox(key, rng)
+            box = protocol.GoldBox(key, rng, batch=False)   # scalar loops
+        elif backend == "gold_batch":
+            # batch_min=1 mirrors AdaptiveBox's gold_batch box: the table
+            # must price the kernel path even at sub-8 batch grid points,
+            # not silently fall back to (and mis-price as) the scalar loop
+            box = protocol.GoldBox(key, rng, batch=True, batch_min=1)
         elif backend == "vec":
             box = protocol.VecBox(key, rng)
         else:
@@ -96,7 +130,7 @@ def _measure_backend(backend: str, key_bits: int, batch: int,
         / (mat_rows * batch),
         "dec": _median_seconds(lambda: box.decrypt(c)) / batch,
     }
-    if backend == "gold":
+    if backend in ("gold", "gold_batch"):
         # cost to lift this representation into the vec limb space
         ints = c
         L16 = (key.n2.bit_length() + 15) // 16
@@ -146,20 +180,31 @@ def calibrate(key_bits=(128,), batch_sizes=(8, 64),
     return table
 
 
-def lookup(table: dict, backend: str, key_bits: int, batch: int) -> dict:
-    """Nearest grid entry for ``backend``: closest key bits, then closest
-    batch (plain entries are stored under 0 bits and match any key)."""
+def lookup(table: dict, backend: str, key_bits: int, batch: int,
+           device: str | None = None) -> dict:
+    """Nearest grid entry for ``backend`` on this device kind: closest key
+    bits, then closest batch (plain entries are stored under 0 bits and
+    match any key).  Entries keyed ``device/backend/bits/batch`` only match
+    their own device; legacy 3-part keys act as device wildcards (used by
+    tests and hand-built tables)."""
+    device = device or device_kind()
     bits = 0 if backend == "plain" else key_bits
     best, best_d = None, None
     for k, v in table.get("entries", {}).items():
-        b, kb, bt = k.split("/")
+        parts = k.split("/")
+        if len(parts) == 4:
+            dev, b, kb, bt = parts
+            if dev != device:
+                continue
+        else:
+            b, kb, bt = parts
         if b != backend:
             continue
         d = (abs(int(kb) - bits), abs(int(bt) - batch))
         if best_d is None or d < best_d:
             best, best_d = v, d
     if best is None:
-        raise KeyError(f"no calibration for {backend!r} "
+        raise KeyError(f"no calibration for {backend!r} on {device!r} "
                        f"(run dispatch.calibrate first)")
     return best
 
@@ -216,11 +261,13 @@ class ACipher:
 class AdaptiveBox:
     """Protocol cipher box routing every op to the cheapest backend.
 
-    Holds one GoldBox and one VecBox over the same key (both bump the
-    shared OpCounter) and consults the calibration table per call; the
-    per-element conversion cost is added when an operand is in the other
-    representation.  ``choices`` records every routing decision for
-    reporting.
+    Holds a scalar GoldBox, a batched-CRT GoldBox (``gold_batch`` — same
+    key, same Python-int ciphertexts, zero conversion cost between the
+    two) and a VecBox, all bumping one shared OpCounter, and consults the
+    calibration table per call; the per-element conversion cost is added
+    when an operand is in the other representation.  Backends missing
+    from the table (e.g. hand-built two-backend tables) are simply not
+    routable.  ``choices`` records every routing decision for reporting.
     """
 
     name = "auto"
@@ -230,11 +277,18 @@ class AdaptiveBox:
         from ..core import protocol  # deferred: avoids import cycle
         self.key = key
         self.table = table
-        self.gold = protocol.GoldBox(key, rng, crt=True, counter=counter)
-        self.vec = protocol.VecBox(key, rng, backend=kernel_backend,
-                                   counter=counter)
+        self.gold = protocol.GoldBox(key, rng, crt=True, counter=counter,
+                                     batch=False)
         self.counter = self.gold.counter
-        self.vec.counter = self.counter
+        self.boxes = {
+            "gold": self.gold,
+            "gold_batch": protocol.GoldBox(
+                key, rng, crt=True, counter=self.counter, batch=True,
+                batch_min=1, kernel_backend=kernel_backend),
+            "vec": protocol.VecBox(key, rng, backend=kernel_backend,
+                                   counter=self.counter),
+        }
+        self.vec = self.boxes["vec"]
         self.choices: Counter = Counter()
 
     # -- routing ---------------------------------------------------------
@@ -249,13 +303,18 @@ class AdaptiveBox:
         N-element ciphertext vector)."""
         conv_el = n_el if conv_el is None else conv_el
         costs = {}
-        for backend in ("gold", "vec"):
-            e = self._entry(backend, n_el)
-            c = e[op] * n_el
-            for rep in reps:
-                if rep != backend:  # operand must change representation
-                    c += self._entry(rep, conv_el)["convert"] * conv_el
+        for backend, rep_b in BACKEND_REP.items():
+            try:
+                c = self._entry(backend, n_el)[op] * n_el
+                for rep in reps:
+                    if rep != rep_b:  # operand must change representation
+                        c += self._entry(rep, conv_el)["convert"] * conv_el
+            except KeyError:
+                continue    # backend (or its conversion) not calibrated
             costs[backend] = c
+        if not costs:
+            raise KeyError(f"no calibrated encrypted backend for {op!r} "
+                           f"(run dispatch.calibrate first)")
         pick = min(costs, key=costs.get)
         self.choices[(op, pick)] += 1
         return pick
@@ -268,28 +327,30 @@ class AdaptiveBox:
                                             self.vec.vk.pack_n2.L16))
         return bi.to_ints(np.asarray(c.data))
 
+    def _box(self, backend: str):
+        return self.boxes[backend]
+
     # -- box interface ---------------------------------------------------
     def encrypt(self, m: np.ndarray) -> ACipher:
         m = np.asarray(m).reshape(-1)
         b = self._pick("enc", m.size)
-        box = self.vec if b == "vec" else self.gold
-        return ACipher(b, box.encrypt(m))
+        return ACipher(BACKEND_REP[b], self._box(b).encrypt(m))
 
     def add(self, c1: ACipher, c2: ACipher) -> ACipher:
         b = self._pick("add", len(c1), reps=(c1.rep, c2.rep))
-        box = self.vec if b == "vec" else self.gold
-        return ACipher(b, box.add(self._coerce(c1, b), self._coerce(c2, b)))
+        rep = BACKEND_REP[b]
+        return ACipher(rep, self._box(b).add(self._coerce(c1, rep),
+                                             self._coerce(c2, rep)))
 
     def matvec(self, K: np.ndarray, c: ACipher) -> ACipher:
         M, N = K.shape
         b = self._pick("matvec", M * N, reps=(c.rep,), conv_el=N)
-        box = self.vec if b == "vec" else self.gold
-        return ACipher(b, box.matvec(K, self._coerce(c, b)))
+        rep = BACKEND_REP[b]
+        return ACipher(rep, self._box(b).matvec(K, self._coerce(c, rep)))
 
     def decrypt(self, c: ACipher) -> np.ndarray:
         b = self._pick("dec", len(c), reps=(c.rep,))
-        box = self.vec if b == "vec" else self.gold
-        return box.decrypt(self._coerce(c, b))
+        return self._box(b).decrypt(self._coerce(c, BACKEND_REP[b]))
 
     def ct_bytes(self, n_el: int) -> int:
         return (self.key.n2.bit_length() + 7) // 8 * n_el

@@ -339,7 +339,7 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         protocol.check_plaintext_fits(key, cfg.spec, nk)
         table = table or dispatch.calibrate(
             key_bits=(cfg.key_bits,), batch_sizes=(nk,),
-            backends=("gold", "vec"), path=calib_path)
+            backends=("gold", "gold_batch", "vec"), path=calib_path)
         box = dispatch.AdaptiveBox(key, rng, table, counter=counter,
                                    kernel_backend=cfg.kernel_backend)
     else:

@@ -15,7 +15,11 @@ import dataclasses
 from collections import deque
 
 MASTER = "master"
-MIN_EDGES, MAX_EDGES = 2, 64
+# K was capped at 64 while the gold cipher ran per-element Python pow; the
+# batched CRT fast path (core/paillier_batch.py) lifted that blocker and
+# bench_topology now sweeps K=128 (256 leaves headroom for mesh's O(K^2)
+# links before route precomputation gets expensive).
+MIN_EDGES, MAX_EDGES = 2, 256
 
 
 def edge_name(k: int) -> str:

@@ -75,6 +75,30 @@ def test_lookup_nearest_entry():
         dispatch.lookup(t, "plain", 0, 16)
 
 
+def test_calibration_keyed_by_device_kind(tmp_path):
+    path = str(tmp_path / "calib.json")
+    dev = dispatch.device_kind()
+    t = dispatch.calibrate(key_bits=(64,), batch_sizes=(8,),
+                           backends=("plain",), path=path)
+    # entries are written under this device's kind ...
+    assert list(t["entries"]) == [f"{dev}/plain/0/8"]
+    assert t["version"] == dispatch.TABLE_VERSION
+    # ... and lookup never crosses device kinds (4-part keys), while
+    # legacy 3-part keys stay device-wildcards for hand-built tables
+    other = "tpu" if dev != "tpu" else "gpu"
+    t2 = {"version": dispatch.TABLE_VERSION, "entries": {
+        f"{other}/gold/128/8": {"enc": 1.0},
+        f"{dev}/gold/128/8": {"enc": 2.0},
+        "vec/128/8": {"enc": 3.0},
+    }}
+    assert dispatch.lookup(t2, "gold", 128, 8) == {"enc": 2.0}
+    assert dispatch.lookup(t2, "gold", 128, 8, device=other) == {"enc": 1.0}
+    assert dispatch.lookup(t2, "vec", 128, 8) == {"enc": 3.0}
+    with pytest.raises(KeyError, match="no calibration"):
+        dispatch.lookup({"entries": {f"{other}/gold/128/8": {}}},
+                        "gold", 128, 8)
+
+
 def test_cost_model():
     cm = dispatch.CostModel()
     assert cm.edge_step_cost(8) > 0

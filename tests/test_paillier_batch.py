@@ -1,0 +1,159 @@
+"""Batched CRT fast path vs. scalar gold: elementwise bit-exactness.
+
+Property tests (via the optional-hypothesis shim) asserting that
+``core.paillier_batch`` — enc_vec / dec_vec / pow_c_vec / matvec — returns
+exactly the integers the scalar Python-``pow`` gold path returns, across
+key sizes, for the same ``random.Random`` stream.  This is the contract
+that lets GoldBox / secure_agg / the coalescing queue swap paths freely.
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import paillier as gold
+from repro.core import paillier_batch as pb
+from repro.core import protocol
+
+settings.register_profile("ci", max_examples=6, deadline=None)
+settings.load_profile("ci")
+
+# three key sizes; all with the default g = n+1 (the enc fast-path shape)
+KEYS = {bits: gold.keygen(bits, random.Random(bits))
+        for bits in (96, 128, 192)}
+BKS = {bits: pb.make_batch_key(key) for bits, key in KEYS.items()}
+B = pb.BATCH_MIN  # fixed batch shape: one jit trace per key, many value draws
+
+
+def _units(key, rng, count, mod=None):
+    mod = mod or key.n2
+    out = []
+    while len(out) < count:
+        c = rng.randrange(1, mod)
+        if math.gcd(c, key.n) == 1:
+            out.append(c)
+    return out
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_enc_dec_bit_exact_across_key_sizes(seed):
+    for bits, key in KEYS.items():
+        bk = BKS[bits]
+        ms = [random.Random(seed ^ bits).randrange(key.n) for _ in range(B)]
+        r1 = random.Random(seed)
+        r2 = random.Random(seed)
+        batched = pb.enc_vec(bk, ms, r1)
+        scalar = [gold.encrypt_crt(key, m, gold.rand_r(key, r2)) for m in ms]
+        assert batched == scalar, bits
+        # identical rng consumption: paths stay interchangeable mid-stream
+        assert r1.getstate() == r2.getstate(), bits
+        assert pb.dec_vec(bk, batched) == \
+            [gold.decrypt_crt(key, c) for c in batched] == ms, bits
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**200))
+def test_pow_c_bit_exact_small_and_reduced_exponents(seed, big_e):
+    """Exponents below and far above phi(p^2) (reduction must be exact)."""
+    for bits, key in KEYS.items():
+        bk = BKS[bits]
+        rng = random.Random(seed ^ bits)
+        cs = _units(key, rng, B)
+        ks = [rng.randrange(1 << 21) for _ in range(B - 2)] + [0, big_e]
+        assert pb.pow_c_vec(bk, cs, ks) == \
+            [pow(c, k, key.n2) for c, k in zip(cs, ks)], bits
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_matvec_bit_exact_vs_scalar_loop(seed):
+    key = KEYS[128]
+    bk = BKS[128]
+    rng = random.Random(seed)
+    N, M = 5, 3   # odd N exercises the mul-tree's carry-over lane
+    cs = _units(key, rng, N)
+    K = np.array([[rng.randrange(1 << 20) for _ in range(N)]
+                  for _ in range(M)], dtype=np.int64)
+    K[0, 0] = -K[0, 0]   # negative exponent -> per-element fallback path
+    want = []
+    for i in range(M):
+        acc = 1
+        for j in range(N):
+            acc = acc * pow(cs[j], int(K[i, j]), key.n2) % key.n2
+        want.append(acc)
+    assert pb.matvec_vec(bk, K, cs) == want
+    many = pb.matvec_many(bk, np.stack([K, K]), [cs, cs])
+    assert many == [want, want]
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_goldbox_batched_equals_scalar_box(seed):
+    """Whole-box equivalence at batch >= BATCH_MIN: same ciphertexts, same
+    plaintexts, same op counters — only the launch structure differs."""
+    key = KEYS[128]
+    fast = protocol.GoldBox(key, random.Random(seed), batch=True,
+                            counter=protocol.OpCounter())
+    ref = protocol.GoldBox(key, random.Random(seed), batch=False,
+                           counter=protocol.OpCounter())
+    m = np.array([random.Random(seed + 1).randrange(1 << 40)
+                  for _ in range(B)], dtype=object)
+    c_f, c_r = fast.encrypt(m), ref.encrypt(m)
+    assert c_f == c_r
+    K = np.array([[random.Random(seed + i * B + j).randrange(1 << 20)
+                   for j in range(B)] for i in range(3)], dtype=np.int64)
+    assert fast.matvec(K, c_f) == ref.matvec(K, c_r)
+    assert list(fast.decrypt(c_f)) == list(ref.decrypt(c_r)) == list(m)
+    assert fast.counter.as_dict() == ref.counter.as_dict()
+
+
+def test_goldbox_below_threshold_stays_scalar_and_exact():
+    key = KEYS[96]
+    box = protocol.GoldBox(key, random.Random(0))
+    small = np.arange(pb.BATCH_MIN - 1)
+    cs = box.encrypt(small)           # scalar loop (below batch_min)
+    assert list(box.decrypt(cs)) == list(small)
+
+
+def test_negative_exponents_match_python_pow():
+    """Un-clipped quantized values go negative; scalar pow() inverts the
+    base mod n^2 and the batched path must do exactly the same."""
+    key, bk = KEYS[96], BKS[96]
+    rng = random.Random(13)
+    cs = _units(key, rng, B)
+    ks = [-rng.randrange(1, 1 << 21) for _ in range(B - 1)] + [-1]
+    assert pb.pow_c_vec(bk, cs, ks) == \
+        [pow(c, k, key.n2) for c, k in zip(cs, ks)]
+
+
+def test_goldbox_crt_false_keeps_strict_range_check():
+    """crt=False means gold.encrypt semantics (raise on m outside [0, n));
+    the batched path implements encrypt_crt's wrap, so it must not engage
+    and make validation depend on batch size."""
+    key = KEYS[96]
+    box = protocol.GoldBox(key, random.Random(0), crt=False, batch=True)
+    with pytest.raises(ValueError, match="out of range"):
+        box.encrypt(np.array([key.n] * B, dtype=object))
+
+
+def test_goldbox_crt_false_stays_on_direct_paths(monkeypatch):
+    """The batched fast path IS the CRT decomposition; a crt=False box is
+    the direct (non-CRT) reference and must never route through it."""
+    key = KEYS[96]
+    box = protocol.GoldBox(key, random.Random(0), crt=False, batch=True)
+    for fn in ("enc_vec", "dec_vec", "matvec_vec"):
+        monkeypatch.setattr(pb, fn, lambda *a, **k: pytest.fail(
+            f"crt=False box called batched {fn}"))
+    cs = box.encrypt(np.arange(B))
+    K = np.eye(B, dtype=np.int64) * 3
+    t = box.matvec(K, cs)
+    assert list(box.decrypt(t)) == [3 * x for x in range(B)]
+
+
+def test_out_of_range_plaintexts_wrap_like_encrypt_crt():
+    """encrypt_crt (the scalar gold default) wraps m mod n rather than
+    raising; the batched path is bit-identical there too."""
+    key, bk = KEYS[96], BKS[96]
+    ms = [key.n, key.n + 7, -5, -key.n - 1] + [3] * (B - 4)
+    r1, r2 = random.Random(2), random.Random(2)
+    assert pb.enc_vec(bk, ms, r1) == \
+        [gold.encrypt_crt(key, m, gold.rand_r(key, r2)) for m in ms]

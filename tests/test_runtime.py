@@ -57,9 +57,11 @@ def test_topology_validation():
     with pytest.raises(ValueError, match="outside"):
         topology.star(1)
     with pytest.raises(ValueError, match="outside"):
-        topology.ring(65)
+        topology.ring(topology.MAX_EDGES + 1)
     with pytest.raises(ValueError, match="unknown topology"):
         topology.make("torus", 4)
+    # K > 64 is legal since the batched gold path unblocked large sweeps
+    assert topology.star(128).n_edges == 128
 
 
 # ---------------------------------------------------------------------------
