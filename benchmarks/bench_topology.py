@@ -22,7 +22,11 @@ hot loops that previously capped the sweep at K=64:
     over the scalar gold path (values < 1 mean the scalar path is faster
     on this device — expected on CPU-interpret containers, where the
     adaptive dispatcher keeps routing to scalar gold; see
-    benchmarks/README.md).
+    benchmarks/README.md).  Since the limb-resident pipeline the batched
+    runs are preceded by ``paillier_batch.warmup`` (the XLA compiles move
+    into a recorded ``warmup_s`` instead of poisoning the first
+    measurement) and the section also records ``host_conversions`` —
+    zero CipherTensor int<->limb crossings during the warm run.
 
 Emits ``BENCH_topology.json`` plus the harness' CSV rows.  Run directly::
 
@@ -39,6 +43,7 @@ import time
 
 import numpy as np
 
+from repro.core import cipher_tensor as ct_mod
 from repro.core import paillier as gold
 from repro.core import paillier_batch as pb
 from repro.core import protocol
@@ -134,39 +139,58 @@ def _op_micro(rows: list) -> dict:
 def _gold_protocol_speedup(rows: list, inst) -> dict:
     """K=128 star with the REAL gold cipher: batched vs. scalar wall-clock.
 
-    The batched configuration runs twice — the first (cold) run pays the
-    one-off XLA compilation of the kernel shapes, the second (warm) run is
-    the steady-state cost a long sweep amortizes to — while the scalar
-    side has nothing to warm and runs once.  The recorded
-    ``speedup_vs_scalar`` uses the warm batched number.
+    Before the batched runs, ``paillier_batch.warmup`` pre-compiles the
+    limb-kernel executables for exactly the shapes this configuration
+    coalesces into (the keygen rng is deterministic, so the pre-derived
+    key IS the protocol's key and the jit caches are shared).  The first
+    batched run is therefore the *warmup-enabled first run* — what a
+    production launch pays after calibration — recorded beside the
+    one-off ``warmup_s`` and the warm steady-state number the
+    ``speedup_vs_scalar`` uses.  ``host_conversions`` counts
+    CipherTensor int<->limb crossings during the warm run: the
+    limb-resident pipeline keeps it at zero (conversions happen at the
+    plaintext phase boundaries only, inside the kernels' own I/O).
     """
+    K = LARGE_EDGE_COUNTS[-1]
+    nk = N_LARGE // K
+    # same draw sequence as make_box inside run_on_runtime (seed=0)
+    key = gold.keygen(GOLD_KEY_BITS, random.Random(0))
+    warm_shapes = (K * nk, 2 * K * nk, (K, nk, nk))
+    warm = pb.warmup(pb.make_batch_key(key), warm_shapes)
     runs = {}
+    conversions = None
     for batched in (True, False):
         cfg = protocol.ProtocolConfig(
-            K=LARGE_EDGE_COUNTS[-1], lam=0.05, iters=GOLD_ITERS, spec=SPEC,
+            K=K, lam=0.05, iters=GOLD_ITERS, spec=SPEC,
             cipher="gold", key_bits=GOLD_KEY_BITS, seed=0,
             gold_batch=batched)
         walls = []
         for _ in range(2 if batched else 1):
+            ct_mod.reset_conversion_stats()
             t0 = time.perf_counter()
             r = run_on_runtime(inst.A, inst.y, cfg,
                                topology=topo_mod.make("star", cfg.K),
                                link=LINK)
             walls.append(time.perf_counter() - t0)
+            if batched:
+                conversions = dict(ct_mod.CONVERSIONS)
         runs[batched] = (walls, r)
     bit_exact = bool(np.array_equal(runs[True][1].history,
                                     runs[False][1].history))
     speedup = runs[False][0][-1] / runs[True][0][-1]
-    emit(rows, f"topo_goldfast_star_K{LARGE_EDGE_COUNTS[-1]}",
+    emit(rows, f"topo_goldfast_star_K{K}",
          runs[True][0][-1],
          derived=f"speedup_vs_scalar={speedup:.3f};bit_exact={bit_exact}")
     return {
-        "edges": LARGE_EDGE_COUNTS[-1], "iters": GOLD_ITERS,
+        "edges": K, "iters": GOLD_ITERS,
         "key_bits": GOLD_KEY_BITS,
+        "warmup_s": warm["seconds"],
+        "warmup_calls": warm["calls"],
+        "batched_first_wall_s": runs[True][0][0],   # warmup-enabled first run
         "batched_wall_s": runs[True][0][-1],
-        "batched_cold_wall_s": runs[True][0][0],
         "scalar_wall_s": runs[False][0][-1],
         "speedup_vs_scalar": speedup, "bit_exact": bit_exact,
+        "host_conversions": conversions,
         "coalesced_ops": runs[True][1].stats["runtime"]["coalesced_ops"],
         "launches": runs[True][1].stats["runtime"]["launches"],
     }

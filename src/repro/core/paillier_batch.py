@@ -18,9 +18,18 @@ their ciphertext wire format.  Remaining per-element host work is limited to
 cheap ring ops (``%``, ``*``, exact division) and the int<->limb conversion;
 no ``pow`` survives.
 
+Since the limb-resident pipeline (:mod:`core.cipher_tensor`) the int
+boundary moved from the op to the phase: ``enc_ct``/``add_ct``/
+``pow_c_ct``/``matvec_many``/``dec_vec`` consume and produce
+:class:`~repro.core.cipher_tensor.CipherTensor` batches whose limbs never
+leave the device between protocol ops — ``from_ints``/``to_ints`` runs once
+where plaintexts enter or leave, not per homomorphic op.  The int-in/
+int-out functions remain as thin materializing wrappers.
+
 Bit-exactness: every function here returns exactly what the scalar gold
 functions return for the same inputs and the same ``random.Random`` stream
-(property-tested in tests/test_paillier_batch.py across key sizes).
+(property-tested in tests/test_paillier_batch.py across key sizes, and
+end-to-end across every protocol arm in tests/test_conformance.py).
 
 Preconditions shared by all batched ModExps: bases must be units mod n
 (ciphertexts and blinding factors are, by construction) — required for the
@@ -35,6 +44,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import random
+import time
 from typing import Sequence
 
 import numpy as np
@@ -43,6 +53,7 @@ import jax.numpy as jnp
 from . import bigint as bi
 from . import paillier as gold
 from . import paillier_vec as pv
+from .cipher_tensor import CipherTensor
 from ..kernels import ops
 
 # Below this batch size the per-launch overhead dominates and callers keep
@@ -128,6 +139,38 @@ def modexp_crt_limbs(bk: BatchKey, bases: Sequence[int], exps,
               jnp.asarray(bq), jnp.asarray(bi.from_ints(eq, le)))
 
 
+def modexp_crt_limbs_in(bk: BatchKey, base_limbs: jnp.ndarray, exps,
+                        backend: str | None = None) -> jnp.ndarray:
+    """:func:`modexp_crt_limbs` for bases already resident in limb form.
+
+    ``base_limbs`` is a ``(B, L16(n^2))`` array (a :class:`CipherTensor`'s
+    payload); the reduction into the two half spaces happens IN-GRAPH
+    (``paillier_vec._reduce_into``), so no host int<->limb conversion runs
+    at all.  Exponents must be nonnegative (negative exponents need a
+    host-side base inversion — callers materialize for that rare path).
+    """
+    vk = bk.vk
+    key = bk.key
+    B = int(base_limbs.shape[0])
+    exps = _norm_exps(exps, B)
+    if any(e < 0 for e in exps):
+        raise ValueError("limb-resident ModExp needs nonnegative exponents")
+    ep = [e % key.phi_p2 for e in exps]
+    eq = [e % key.phi_q2 for e in exps]
+    le = max(1, max(bi.n_limbs_for(e) for e in ep + eq))
+
+    def body(c, ep, eq):
+        cp = pv._reduce_into(c, vk.pack_p2, backend)
+        cq = pv._reduce_into(c, vk.pack_q2, backend)
+        xp = ops.modexp(cp, ep, vk.pack_p2, backend=backend)
+        xq = ops.modexp(cq, eq, vk.pack_q2, backend=backend)
+        return pv.crt_combine_batch(vk, xp, xq, backend=backend)
+
+    fn = pv._cached_jit(vk, f"crt_modexp_limbs_{backend}", body)
+    return fn(base_limbs, jnp.asarray(bi.from_ints(ep, le)),
+              jnp.asarray(bi.from_ints(eq, le)))
+
+
 def modexp_crt_vec(bk: BatchKey, bases: Sequence[int], exps,
                    backend: str | None = None) -> list[int]:
     """Int-in/int-out batched ``pow(b, e, n^2)`` (see modexp_crt_limbs)."""
@@ -136,27 +179,65 @@ def modexp_crt_vec(bk: BatchKey, bases: Sequence[int], exps,
     return bi.to_ints(modexp_crt_limbs(bk, bases, exps, backend=backend))
 
 
-def pow_c_vec(bk: BatchKey, cs: Sequence[int], ks,
+def pow_c_vec(bk: BatchKey, cs, ks,
               backend: str | None = None) -> list[int]:
     """Batched plaintext-constant multiply ⊗: [c^k mod n^2] elementwise.
 
     Bit-exact vs. scalar :func:`gold.c_mul_const` / ``c_mul_const_crt``
     (requires the private key holder, as all CRT-decomposed ops do).
+    ``cs`` may be a :class:`CipherTensor` — nonnegative exponents then run
+    limb-in without materializing the batch.
     """
+    if isinstance(cs, CipherTensor):
+        return pow_c_ct(bk, cs, ks, backend=backend).to_ints()
     return modexp_crt_vec(bk, cs, ks, backend=backend)
+
+
+def pow_c_ct(bk: BatchKey, cs: CipherTensor, ks,
+             backend: str | None = None) -> CipherTensor:
+    """Limb-in/limb-out ⊗ over a resident ciphertext batch."""
+    B = len(cs)
+    exps = _norm_exps(ks, B)
+    if any(e < 0 for e in exps):   # host base inversion: materialize once
+        return CipherTensor(
+            bk, modexp_crt_limbs(bk, cs.to_ints(), exps, backend=backend))
+    return CipherTensor(
+        bk, modexp_crt_limbs_in(bk, cs.limbs, exps, backend=backend))
 
 
 # ---------------------------------------------------------------------------
 # Encryption / decryption / homomorphic matvec
 # ---------------------------------------------------------------------------
 
-def enc_vec(bk: BatchKey, ms, rng: random.Random,
-            backend: str | None = None) -> list[int]:
-    """Batched g=n+1 encryption: one kernel launch for all r^n blindings.
+def _enc_ct_impl(bk: BatchKey, ms: list[int], rs: list[int],
+                 backend: str | None = None) -> CipherTensor:
+    """g=n+1 encryption entirely in limb space: c = (1 + m n) * r^n mod n^2.
 
-    Draws r exactly like the scalar loop (same rng stream), computes the
-    whole batch's r^n mod n^2 in the CRT half spaces, and finishes with
-    per-element ring multiplies.  Bit-identical to
+    r^n runs through the CRT half spaces; the (1 + m n) affine lift and the
+    final blinding multiply stay in-graph, so the ciphertexts are BORN
+    limb-resident (no host ring multiplies, no to_ints)."""
+    key, vk = bk.key, bk.vk
+    Ln, L2 = vk.pack_n.L16, vk.pack_n2.L16
+    rn = modexp_crt_limbs(bk, rs, key.n, backend=backend)
+    m_limbs = bi.from_ints([m % key.n for m in ms], Ln)
+
+    def body(m_limbs, rn):
+        n_row = jnp.broadcast_to(jnp.asarray(vk.n_limbs),
+                                 (m_limbs.shape[0], L2))
+        gm = bi.mul(m_limbs, n_row, out_limbs=L2)      # m*n < n^2, exact
+        gm = bi.add(gm, jnp.zeros_like(gm).at[..., 0].set(1))  # 1 + m n
+        return ops.mulmod(gm, rn, vk.pack_n2, backend=backend)
+
+    fn = pv._cached_jit(vk, f"enc_gold_{backend}", body)
+    return CipherTensor(bk, fn(jnp.asarray(m_limbs), rn))
+
+
+def enc_ct(bk: BatchKey, ms, rng: random.Random,
+           backend: str | None = None) -> CipherTensor:
+    """Batched g=n+1 encryption, limb-out: one launch for all blindings.
+
+    Draws r exactly like the scalar loop (same rng stream); the resulting
+    :class:`CipherTensor` materializes to ints bit-identical to
     ``[gold.encrypt_crt(key, m, rand_r(key, rng)) for m in ms]`` —
     including for plaintexts outside [0, n), which ``encrypt_crt`` (unlike
     ``encrypt``) wraps mod n via (n+1)^m = 1 + (m mod n) n  (mod n^2).
@@ -165,10 +246,27 @@ def enc_vec(bk: BatchKey, ms, rng: random.Random,
     if key.g != key.n + 1:
         raise NotImplementedError("batched path uses the g = n+1 fast path")
     ms = [int(m) for m in np.asarray(ms, dtype=object).reshape(-1)]
+    if not ms:
+        return CipherTensor(bk, jnp.zeros((0, bk.vk.pack_n2.L16), jnp.int32),
+                            ints=[])
     rs = rand_r_vec(key, len(ms), rng)
-    rn = modexp_crt_vec(bk, rs, key.n, backend=backend)
-    return [(1 + m * key.n) % key.n2 * rni % key.n2
-            for m, rni in zip(ms, rn)]
+    return _enc_ct_impl(bk, ms, rs, backend=backend)
+
+
+def enc_vec(bk: BatchKey, ms, rng: random.Random,
+            backend: str | None = None) -> list[int]:
+    """Int-out form of :func:`enc_ct` (same rng stream, same ciphertexts)."""
+    return enc_ct(bk, ms, rng, backend=backend).to_ints()
+
+
+def add_ct(bk: BatchKey, c1: CipherTensor, c2: CipherTensor,
+           backend: str | None = None) -> CipherTensor:
+    """⊕ on resident batches: elementwise ciphertext product mod n^2.
+
+    One batched Barrett mulmod launch; bit-identical to the per-element
+    ``(a * b) % n2`` host loop it replaces."""
+    return CipherTensor(bk, ops.mulmod(c1.limbs, c2.limbs, bk.vk.pack_n2,
+                                       backend=backend))
 
 
 def rn_pool_limbs(bk: BatchKey, rs: Sequence[int],
@@ -181,42 +279,55 @@ def rn_pool_limbs(bk: BatchKey, rs: Sequence[int],
     return modexp_crt_limbs(bk, rs, bk.key.n, backend=backend)
 
 
-def dec_vec(bk: BatchKey, cs: Sequence[int],
+def dec_vec(bk: BatchKey, cs,
             backend: str | None = None) -> list[int]:
     """Batched decryption: c^lam for the whole batch in one CRT launch.
 
     The L(x) = (x-1)/n exact division and the mu multiply stay on the host
     (one divmod + one mulmod per element — no pow).  Bit-identical to
-    ``[gold.decrypt_crt(key, c) for c in cs]``.
+    ``[gold.decrypt_crt(key, c) for c in cs]``.  Limb-in: a
+    :class:`CipherTensor` decrypts straight off its resident limbs (the
+    bases reduce into the half spaces in-graph, no ciphertext to_ints).
     """
     key = bk.key
-    x = modexp_crt_vec(bk, cs, key.lam, backend=backend)
+    if isinstance(cs, CipherTensor):
+        if not len(cs):
+            return []
+        x = bi.to_ints(modexp_crt_limbs_in(bk, cs.limbs, key.lam,
+                                           backend=backend))
+    else:
+        x = modexp_crt_vec(bk, cs, key.lam, backend=backend)
     return [(xi - 1) // key.n * key.mu % key.n for xi in x]
 
 
-def matvec_many(bk: BatchKey, Ks, cs_list: Sequence[Sequence[int]],
-                backend: str | None = None) -> list[list[int]]:
+def matvec_many(bk: BatchKey, Ks, cs_list: Sequence,
+                backend: str | None = None) -> list:
     """Fused homomorphic matvecs: out[b][i] = prod_j cs[b][j]^{Ks[b,i,j]}.
 
     All B*(M, N) exponent blocks flatten into ONE batched CRT ModExp launch
     (the coalesced form used by the runtime's queue), then one shared
     log-depth mulmod tree reduces the rows mod n^2.  With B=1 this is the
-    gold box's per-edge eq. (13) matvec.  Each ciphertext converts to limbs
-    once (B*N host conversions); the M-fold duplication across matrix rows
-    happens in-graph via broadcast — except under negative exponents, where
-    per-element base inversion forces the general per-element path.
+    gold box's per-edge eq. (13) matvec.
+
+    Limb-resident in, limb-resident out: when every entry of ``cs_list``
+    is a :class:`CipherTensor`, the bases reduce into the CRT half spaces
+    in-graph (zero host conversions) and each output row comes back as a
+    CipherTensor, so chained protocol ops never touch Python ints.  Int
+    sequences keep the int-in/int-out contract (B*N host conversions, one
+    per ciphertext).  Negative exponents need per-element host base
+    inversion and force the materialized general path either way.
     """
     key, vk = bk.key, bk.vk
     Ks = np.asarray(Ks, dtype=object)
     B, M, N = Ks.shape
-    rows: list[int] = []
-    for b in range(B):
-        row = [int(c) for c in cs_list[b]]
+    ct_in = B > 0 and all(isinstance(c, CipherTensor) for c in cs_list)
+    for b, row in enumerate(cs_list):
         if len(row) != N:
             raise ValueError(f"ciphertext vector {b} has {len(row)} != {N}")
-        rows.extend(row)
     exps = _norm_exps(Ks.reshape(-1), B * M * N)
+    L2 = vk.pack_n2.L16
     if any(e < 0 for e in exps):
+        rows = [int(c) for row in cs_list for c in row]  # materializes CTs
         bases = [rows[b * N + j] for b in range(B)
                  for _ in range(M) for j in range(N)]
         powed = modexp_crt_limbs(bk, bases, exps, backend=backend)
@@ -224,33 +335,102 @@ def matvec_many(bk: BatchKey, Ks, cs_list: Sequence[Sequence[int]],
         ep = [e % key.phi_p2 for e in exps]
         eq = [e % key.phi_q2 for e in exps]
         le = max(1, max(bi.n_limbs_for(e) for e in ep + eq))
-        bp = bi.from_ints([c % key.p2 for c in rows], vk.pack_p2.L16)
-        bq = bi.from_ints([c % key.q2 for c in rows], vk.pack_q2.L16)
+        ep_l = jnp.asarray(bi.from_ints(ep, le))
+        eq_l = jnp.asarray(bi.from_ints(eq, le))
 
-        def powed_body(bp, ep, bq, eq):
-            def bcast(x):
-                x = x.reshape(-1, 1, N, x.shape[-1])
-                x = jnp.broadcast_to(x, (x.shape[0], M, N, x.shape[-1]))
-                return x.reshape(-1, x.shape[-1])
-            xp = ops.modexp(bcast(bp), ep, vk.pack_p2, backend=backend)
-            xq = ops.modexp(bcast(bq), eq, vk.pack_q2, backend=backend)
-            return pv.crt_combine_batch(vk, xp, xq, backend=backend)
+        def bcast(x):
+            x = x.reshape(-1, 1, N, x.shape[-1])
+            x = jnp.broadcast_to(x, (x.shape[0], M, N, x.shape[-1]))
+            return x.reshape(-1, x.shape[-1])
 
-        powed = pv._cached_jit(vk, f"crt_mv_{backend}_{M}_{N}", powed_body)(
-            jnp.asarray(bp), jnp.asarray(bi.from_ints(ep, le)),
-            jnp.asarray(bq), jnp.asarray(bi.from_ints(eq, le)))
-    L2 = vk.pack_n2.L16
+        if ct_in:
+            c_limbs = jnp.concatenate([c.limbs for c in cs_list], axis=0)
+
+            def powed_ct_body(c, ep, eq):
+                cp = pv._reduce_into(c, vk.pack_p2, backend)
+                cq = pv._reduce_into(c, vk.pack_q2, backend)
+                xp = ops.modexp(bcast(cp), ep, vk.pack_p2, backend=backend)
+                xq = ops.modexp(bcast(cq), eq, vk.pack_q2, backend=backend)
+                return pv.crt_combine_batch(vk, xp, xq, backend=backend)
+
+            powed = pv._cached_jit(vk, f"crt_mv_limbs_{backend}_{M}_{N}",
+                                   powed_ct_body)(c_limbs, ep_l, eq_l)
+        else:
+            rows = [int(c) for row in cs_list for c in row]
+            bp = bi.from_ints([c % key.p2 for c in rows], vk.pack_p2.L16)
+            bq = bi.from_ints([c % key.q2 for c in rows], vk.pack_q2.L16)
+
+            def powed_body(bp, ep, bq, eq):
+                xp = ops.modexp(bcast(bp), ep, vk.pack_p2, backend=backend)
+                xq = ops.modexp(bcast(bq), eq, vk.pack_q2, backend=backend)
+                return pv.crt_combine_batch(vk, xp, xq, backend=backend)
+
+            powed = pv._cached_jit(vk, f"crt_mv_{backend}_{M}_{N}",
+                                   powed_body)(
+                jnp.asarray(bp), ep_l, jnp.asarray(bq), eq_l)
 
     def tree(powed):
         return pv.mul_tree(vk, powed.reshape(-1, N, L2), backend=backend)
 
     out = pv._cached_jit(vk, f"crt_matvec_tree_{backend}_{N}", tree)(powed)
+    if ct_in:
+        return [CipherTensor(bk, out[b * M:(b + 1) * M]) for b in range(B)]
     ints = bi.to_ints(out)
     return [ints[b * M:(b + 1) * M] for b in range(B)]
 
 
-def matvec_vec(bk: BatchKey, K, cs: Sequence[int],
-               backend: str | None = None) -> list[int]:
-    """Single homomorphic matvec (M, N) x (N,) -> (M,), batched kernels."""
+def matvec_vec(bk: BatchKey, K, cs,
+               backend: str | None = None):
+    """Single homomorphic matvec (M, N) x (N,) -> (M,), batched kernels.
+
+    Returns a :class:`CipherTensor` when ``cs`` is one (limb-resident
+    end to end), a list of ints otherwise.
+    """
     K = np.asarray(K, dtype=object)
-    return matvec_many(bk, K[None], [list(cs)], backend=backend)[0]
+    cs = cs if isinstance(cs, CipherTensor) else list(cs)
+    return matvec_many(bk, K[None], [cs], backend=backend)[0]
+
+
+# ---------------------------------------------------------------------------
+# jit compile-cache warmup
+# ---------------------------------------------------------------------------
+
+def warmup(bk: BatchKey, shapes: Sequence,
+           backend: str | None = None) -> dict:
+    """Pre-compile the batched-path executables for the given shapes.
+
+    XLA compiles one executable per (op, batch shape, exponent width); a
+    cold K=128 protocol run used to pay ~16 s of compiles on its first
+    iteration.  Calling this hook first (``dispatch.calibrate`` and
+    ``bench_topology`` do) moves those compiles out of the measured path —
+    the jit caches are keyed by the shared :class:`VecKey`, so any
+    box over an equal :class:`~repro.core.paillier.PaillierKey` hits them.
+
+    ``shapes`` entries: an int ``B`` warms the elementwise ops (enc, dec,
+    ⊕-add) at batch B; a ``(B, M, N)`` tuple warms the fused limb-resident
+    matvec at both 1- and 2-limb exponent widths (the Gamma_2 value range).
+    Dummy operands (m=0, r=1, c=1) exercise identical graph shapes to real
+    traffic.  Returns ``{"calls", "seconds"}`` telemetry.
+    """
+    t0 = time.perf_counter()
+    calls = 0
+    for shape in shapes:
+        if isinstance(shape, (tuple, list)):
+            B, M, N = (int(s) for s in shape)
+            if min(B, M, N) <= 0:
+                continue
+            ones = CipherTensor.from_ints(bk, [1] * N)
+            for val in (3, 1 << 17):   # 1- and 2-limb exponent widths
+                Ks = np.full((B, M, N), val, dtype=object)
+                matvec_many(bk, Ks, [ones] * B, backend=backend)
+                calls += 1
+        else:
+            B = int(shape)
+            if B <= 0:
+                continue
+            _enc_ct_impl(bk, [0] * B, [1] * B, backend=backend)
+            ones = CipherTensor.from_ints(bk, [1] * B)
+            dec_vec(bk, ones, backend=backend)
+            add_ct(bk, ones, ones, backend=backend)
+            calls += 3
+    return {"calls": calls, "seconds": time.perf_counter() - t0}

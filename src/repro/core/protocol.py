@@ -48,10 +48,12 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import admm as admm_mod
+from . import cipher_tensor as ct_mod
 from . import paillier as gold
 from . import paillier_batch as pb
 from . import paillier_vec as pv
 from . import bigint as bi
+from .cipher_tensor import CipherTensor
 from .quantization import QuantSpec, gamma1, gamma2, dequantize_theorem1
 
 
@@ -104,12 +106,17 @@ class GoldBox:
     Batches of ``batch_min`` (default 8) or more elements route through the
     batched CRT fast path (``core.paillier_batch``): the ModExps of a whole
     enc/dec/matvec call run as one limb-kernel launch and no per-element
-    Python ``pow`` executes.  ``batch=False`` keeps the scalar loops — the
-    bit-exactness reference the fast path is property-tested against —
-    and so does ``crt=False``, since the fast path IS the CRT
-    decomposition and must not stand in for the direct (non-CRT)
-    reference.  Ciphertexts are identical either way (same rng stream,
-    same values).
+    Python ``pow`` executes.  Batched ciphertexts stay RESIDENT in limb
+    form (:class:`~repro.core.cipher_tensor.CipherTensor`): encrypt emits
+    limbs, ⊕/⊗/matvec chain on them in-graph, and decrypt consumes them —
+    so the int<->limb host conversion runs once per phase boundary, not
+    per op.  ``batch=False`` keeps the scalar loops — the bit-exactness
+    reference the fast path is property-tested against — and so does
+    ``crt=False``, since the fast path IS the CRT decomposition and must
+    not stand in for the direct (non-CRT) reference.  Ciphertext VALUES
+    are identical either way (same rng stream; a CipherTensor
+    materializes to exactly the scalar ints), and every method accepts
+    both representations.
     """
 
     name = "gold"
@@ -132,7 +139,7 @@ class GoldBox:
             self._bk = pb.make_batch_key(self.key)
         return self._bk
 
-    def encrypt(self, m: np.ndarray) -> list[int]:
+    def encrypt(self, m: np.ndarray):
         flat = np.asarray(m).reshape(-1)
         self.counter.bump("enc", flat.size)
         # batched enc implements encrypt_crt's semantics (m wraps mod n),
@@ -141,14 +148,18 @@ class GoldBox:
         # appear and disappear with the batch size
         if self.batch and self.crt and flat.size >= self.batch_min \
                 and self.key.g == self.key.n + 1:
-            return pb.enc_vec(self.batch_key(), flat, self.rng,
-                              backend=self.kernel_backend)
+            return pb.enc_ct(self.batch_key(), flat, self.rng,
+                             backend=self.kernel_backend)
         enc = gold.encrypt_crt if self.crt else gold.encrypt
         return [enc(self.key, int(x), gold.rand_r(self.key, self.rng))
                 for x in flat]
 
     def add(self, c1, c2):
         self.counter.bump("mulmod", len(c1))
+        if self.batch and self.crt and isinstance(c1, CipherTensor) \
+                and isinstance(c2, CipherTensor):
+            return pb.add_ct(self.batch_key(), c1, c2,
+                             backend=self.kernel_backend)
         return [(a * b) % self.key.n2 for a, b in zip(c1, c2)]
 
     def matvec(self, K: np.ndarray, c):
@@ -299,6 +310,11 @@ class EdgeNode:
         self.p2 = None
         self.phi_p2 = None
         self.g_p = None
+        # batched-kernel routing for the two Algorithm-3 edges (set from
+        # ProtocolConfig.gold_batch via collab_setup; the edge needs no
+        # key material for these — only p^2 itself)
+        self.collab_batch = False
+        self.collab_backend = None
 
     # -- Initialization phase -------------------------------------------
     def init_phase(self, AkTAk: np.ndarray, rho: float) -> np.ndarray:
@@ -318,16 +334,43 @@ class EdgeNode:
         return box.add(self.alpha_hat, t)    # alpha-hat ⊕ ...
 
     # -- Algorithm 3: collaborative masked p^2-space ModExp ---------------
-    def collab_setup(self, p2: int, phi_p2: int, g: int):
+    def collab_setup(self, p2: int, phi_p2: int, g: int,
+                     batch: bool = False, backend: str | None = None):
         self.p2, self.phi_p2, self.g_p = p2, phi_p2, g % p2
+        self.collab_batch = batch
+        self.collab_backend = backend
 
     def collab_encrypt_half(self, masked_exp: np.ndarray) -> list[int]:
-        """g'^{O(Gamma(z)) mod phi(p^2)} mod p^2 for each masked exponent."""
-        return [pow(self.g_p, int(e) % self.phi_p2, self.p2)
-                for e in np.asarray(masked_exp).reshape(-1)]
+        """g'^{O(Gamma(z)) mod phi(p^2)} mod p^2 for each masked exponent.
 
-    def reduce_p2(self, x_hat: list[int]) -> list[int]:
-        """(x-hat)' = x-hat mod p^2 (decryption assist, round 1)."""
+        With batched routing (``gold_batch``) the whole batch runs as ONE
+        limb-kernel ModExp mod p^2; otherwise the scalar ``pow`` loop —
+        both bit-identical (tests/test_conformance.py)."""
+        es = [int(e) % self.phi_p2
+              for e in np.asarray(masked_exp).reshape(-1)]
+        if self.collab_batch and len(es) >= pb.BATCH_MIN:
+            return ct_mod.modexp_mod_vec(self.g_p, es, self.p2,
+                                         backend=self.collab_backend)
+        return self._collab_half_scalar(es)
+
+    def _collab_half_scalar(self, es: list[int]) -> list[int]:
+        return [pow(self.g_p, e, self.p2) for e in es]
+
+    def reduce_p2(self, x_hat) -> list[int]:
+        """(x-hat)' = x-hat mod p^2 (decryption assist, round 1).
+
+        A limb-resident batch reduces in one vectorized launch straight
+        off its limbs; int lists batch-reduce too under ``gold_batch``
+        routing, else fall back to the per-element host ``%`` loop."""
+        if isinstance(x_hat, CipherTensor):
+            return ct_mod.reduce_mod_vec(x_hat, self.p2,
+                                         backend=self.collab_backend)
+        if self.collab_batch and len(x_hat) >= pb.BATCH_MIN:
+            return ct_mod.reduce_mod_vec(x_hat, self.p2,
+                                         backend=self.collab_backend)
+        return self._reduce_p2_scalar(x_hat)
+
+    def _reduce_p2_scalar(self, x_hat) -> list[int]:
         return [int(c) % self.p2 for c in x_hat]
 
 
@@ -405,7 +448,9 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
         Bbar_rowsums.append((Bk * cfg.rho) @ np.ones(Nk))
         alphas_real.append(Bk @ (Ak.T @ ys))
         if cfg.collaborative and key is not None:
-            edge.collab_setup(key.p2, key.phi_p2, key.g)
+            edge.collab_setup(key.p2, key.phi_p2, key.g,
+                              batch=cfg.gold_batch,
+                              backend=cfg.kernel_backend)
 
     # --- Data security sharing phase -------------------------------------
     counter.phase = "share"
@@ -487,4 +532,36 @@ def collaborative_encrypt(key: gold.PaillierKey, edge: EdgeNode,
         gm = gold.crt_combine(key, gp, gq)
         rn = pow(gold.rand_r(key, rng), key.n, key.n2)
         out.append((gm * rn) % key.n2)
+    return out
+
+
+def collab_encrypt_vec(key: gold.PaillierKey, edge: EdgeNode,
+                       m: np.ndarray, rng: random.Random,
+                       backend: str | None = None) -> list[int]:
+    """Whole-batch :func:`collaborative_encrypt`: no Python ``pow`` loops.
+
+    Same Remark-4 information flow, same rng stream, bit-identical
+    ciphertexts (tests/test_conformance.py): masks draw first, the edge
+    answers its (batched, if routed) p^2 half, then the master's three
+    ModExp batches — unmask factors mod p^2, the q^2 half, and the r^n
+    blindings in the CRT half spaces — each run as one kernel launch.
+    """
+    m = np.asarray(m).reshape(-1)
+    masks = [rng.getrandbits(64) for _ in m]
+    masked = np.array([int(x) + t for x, t in zip(m, masks)], dtype=object)
+    # --- edge side (p^2 space) ---
+    e_half = edge.collab_encrypt_half(masked)
+    # --- master side, batched ---
+    uns = ct_mod.modexp_mod_vec(key.g, [-t % key.phi_p2 for t in masks],
+                                key.p2, backend=backend)
+    gqs = ct_mod.modexp_mod_vec(key.g, [int(x) % key.phi_q2 for x in m],
+                                key.q2, backend=backend)
+    bk = pb.make_batch_key(key)
+    rs = pb.rand_r_vec(key, len(m), rng)
+    rns = pb.modexp_crt_vec(bk, rs, key.n, backend=backend)
+    out = []
+    for ep, un, gq, rn in zip(e_half, uns, gqs, rns):
+        gp = (ep * un) % key.p2                       # g^m mod p^2
+        gm = gold.crt_combine(key, gp, gq)
+        out.append(gm * rn % key.n2)
     return out

@@ -12,7 +12,8 @@ boundary (``tick_s`` of virtual time), then :meth:`flush` groups them by
   :func:`c_matvec_many`, which flattens all K ``(M, N)`` ModExp blocks
   into one kernel launch and shares the log-tree row reduction; on the
   gold backend the same fusion runs through the batched CRT fast path
-  (``paillier_batch.matvec_many`` — Python ints in/out, one launch).
+  (``paillier_batch.matvec_many`` — limb-resident CipherTensors in and
+  out, one launch).
 
 Because the underlying ops are exact modular arithmetic, coalescing is
 bit-transparent: results and OpCounter totals are identical to issuing
@@ -20,8 +21,23 @@ each op alone (asserted in tests/test_dispatch.py).  Boxes that cannot
 concatenate opaque ciphertexts (the AdaptiveBox wrapper) fall back to
 per-entry execution inside the same flush event.
 
+Gold-cipher groups concatenate LIMB-RESIDENT: batched GoldBox ciphertexts
+are :class:`~repro.core.cipher_tensor.CipherTensor` batches, so `_cat`/
+`_split` slice and join limb arrays directly — no int materialization at
+the queue boundary (the ints-per-op round-trip was ~10-15% of batched
+gold time).
+
 ``counter.phase`` is captured at submit time and restored per group at
 flush time, so per-phase accounting survives the deferred execution.
+
+``hold_ticks > 0`` relaxes the flush-every-tick rule: while every pending
+group is a singleton (nothing to coalesce), the flush defers up to that
+many ticks waiting for company — the moment a second same-shaped op
+arrives the queue flushes at the next tick, and a hold horizon bounds the
+added latency.  This lets late edges' ops (heterogeneous links, deadline
+mode) share a launch with their peers — or with the NEXT iteration's ops
+— instead of flushing alone.  Results stay bit-identical; only timing
+and launch counts change.
 """
 from __future__ import annotations
 
@@ -31,8 +47,10 @@ from typing import Callable
 import numpy as np
 import jax.numpy as jnp
 
+from ..core import cipher_tensor as ct_mod
 from ..core import paillier_batch as pbatch
 from ..core import paillier_vec as pv
+from ..core.cipher_tensor import CipherTensor
 from ..kernels import ops
 from .scheduler import Scheduler
 
@@ -79,8 +97,10 @@ class _Entry:
 
 
 def _cat(parts):
-    if isinstance(parts[0], list):
-        out = []
+    if all(isinstance(p, CipherTensor) for p in parts):
+        return ct_mod.concat(parts)        # stays limb-resident
+    if isinstance(parts[0], (list, CipherTensor)):
+        out = []                           # mixed reps: join as ints
         for p in parts:
             out.extend(p)
         return out
@@ -99,16 +119,20 @@ def _split(data, sizes):
 
 class CoalesceQueue:
     def __init__(self, sched: Scheduler, box, counter=None,
-                 tick_s: float = 1e-4):
+                 tick_s: float = 1e-4, hold_ticks: int = 0):
         self.sched = sched
         self.box = box
         self.counter = counter if counter is not None \
             else getattr(box, "counter", None)
         self.tick_s = tick_s
+        self.hold_ticks = hold_ticks   # max ticks a lone op waits for company
         self.pending: dict[tuple, list[_Entry]] = {}
         self._flush_posted = False
+        self._horizon_posted = False   # a hold-horizon event is in flight
+        self._win = 0                  # flush-window id (stale-event guard)
         self.launches = 0          # batched box/kernel invocations
         self.coalesced_ops = 0     # ops that shared a launch with others
+        self.held_flushes = 0      # flushes deferred waiting for company
 
     # -- submission ------------------------------------------------------
     def submit(self, op: str, args: tuple, cb: Callable) -> None:
@@ -118,16 +142,27 @@ class CoalesceQueue:
         else:
             shape = (self._size(args[0]),)
         phase = self.counter.phase if self.counter is not None else "?"
-        self.pending.setdefault((op, shape), []).append(
-            _Entry(args=args, phase=phase, cb=cb))
+        entries = self.pending.setdefault((op, shape), [])
+        entries.append(_Entry(args=args, phase=phase, cb=cb))
         if not self._flush_posted:
             self._flush_posted = True
-            # next tick strictly after now; float division can put an exact
-            # boundary a hair below its integer index, so snap before +1
-            q = self.sched.now / self.tick_s
-            idx = round(q) if abs(q - round(q)) < 1e-9 else int(q)
-            self.sched.at((idx + 1) * self.tick_s, self.flush,
-                          label="coalesce.flush")
+            self._post_flush()
+        elif self._horizon_posted and len(entries) == 2:
+            # a held singleton just got company: flush at the next tick
+            # (the now-stale horizon event no-ops via its window id)
+            self._post_flush()
+
+    def _post_flush(self) -> None:
+        w = self._win
+        self.sched.at(self._tick_time(1), lambda: self.flush(win=w),
+                      label="coalesce.flush")
+
+    def _tick_time(self, n_ticks: int) -> float:
+        # n_ticks strictly after now; float division can put an exact
+        # boundary a hair below its integer index, so snap before adding
+        q = self.sched.now / self.tick_s
+        idx = round(q) if abs(q - round(q)) < 1e-9 else int(q)
+        return (idx + n_ticks) * self.tick_s
 
     @staticmethod
     def _size(x) -> int:
@@ -138,9 +173,28 @@ class CoalesceQueue:
         return len(x)
 
     # -- execution -------------------------------------------------------
-    def flush(self) -> None:
+    def flush(self, force: bool = False, win: int | None = None) -> None:
+        if win is not None and win != self._win:
+            return    # event of a window that already flushed
+        if not self.pending:
+            return
+        if (self.hold_ticks and not force
+                and all(len(es) == 1 for es in self.pending.values())):
+            # nothing coalesces yet — hold for company, bounded by the
+            # horizon posted below (deadline-mode late edges' ops get to
+            # share a launch with their peers or the next iteration)
+            if not self._horizon_posted:
+                self._horizon_posted = True
+                self.held_flushes += 1
+                w = self._win
+                self.sched.at(self._tick_time(self.hold_ticks),
+                              lambda: self.flush(force=True, win=w),
+                              label="coalesce.hold")
+            return
         groups, self.pending = self.pending, {}
         self._flush_posted = False
+        self._horizon_posted = False
+        self._win += 1
         batchable = getattr(self.box, "name", "") in ("plain", "gold", "vec")
         for (op, shape), entries in sorted(groups.items(),
                                            key=lambda kv: repr(kv[0])):

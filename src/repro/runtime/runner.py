@@ -139,7 +139,8 @@ class MasterActor:
         for k in range(cfg.K):
             if cfg.collaborative and rt.key is not None:
                 rt.transport.send(MASTER, edge_name(k), "collab",
-                                  (rt.key.p2, rt.key.phi_p2, rt.key.g))
+                                  (rt.key.p2, rt.key.phi_p2, rt.key.g,
+                                   cfg.gold_batch, cfg.kernel_backend))
             rt.transport.send(MASTER, edge_name(k), "init",
                               (self.AkTAk[k], cfg.rho),
                               nbytes=self.AkTAk[k].nbytes)
@@ -317,12 +318,19 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
                    stale_limit: int = 4,
                    table: dict | None = None,
                    calib_path: str | None = None,
+                   coalesce_hold_ticks: int = 0,
                    trace: bool = False) -> "protocol.ProtocolResult":
     """Run 3P-ADMM-PC2 on the simulated edge network; see module docstring.
 
     Returns a ``ProtocolResult`` whose ``stats`` carry the usual op/traffic
     counters plus a ``"runtime"`` section (virtual clock, per-iteration
     completion times, per-link bytes, coalescing and dispatch telemetry).
+
+    ``coalesce_hold_ticks > 0`` lets the crypto queue hold lone ops for up
+    to that many ticks waiting for batch company — useful in deadline mode,
+    where heterogeneous link delays otherwise strand late edges' ops in
+    singleton launches (and a straggler's chain can merge with the next
+    iteration's ops).  0 (default) preserves flush-every-tick semantics.
     """
     rng = random.Random(cfg.seed)
     M, N = A.shape
@@ -339,7 +347,8 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         protocol.check_plaintext_fits(key, cfg.spec, nk)
         table = table or dispatch.calibrate(
             key_bits=(cfg.key_bits,), batch_sizes=(nk,),
-            backends=("gold", "gold_batch", "vec"), path=calib_path)
+            backends=("gold", "gold_batch", "vec"), path=calib_path,
+            warm_key=key, warm_shapes=(nk, (1, nk, nk)))
         box = dispatch.AdaptiveBox(key, rng, table, counter=counter,
                                    kernel_backend=cfg.kernel_backend)
     else:
@@ -350,7 +359,8 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         raise ValueError(f"topology has {topo.n_edges} edges, cfg.K={K}")
     sched = Scheduler(seed=cfg.seed, trace=trace)
     transport = Transport(sched, topo, default=link, per_link=per_link)
-    cq = CoalesceQueue(sched, box, counter=counter, tick_s=tick_s)
+    cq = CoalesceQueue(sched, box, counter=counter, tick_s=tick_s,
+                       hold_ticks=coalesce_hold_ticks)
     cost = cost_model or dispatch.CostModel()
     rt = _Runtime(sched, transport, cq, box, key, counter, cfg, nk, mode,
                   cost, stale_limit)
@@ -387,6 +397,7 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
             "retransmits": transport.retransmits,
             "coalesced_ops": cq.coalesced_ops,
             "launches": cq.launches,
+            "held_flushes": cq.held_flushes,
         },
     }
     if isinstance(box, dispatch.AdaptiveBox):

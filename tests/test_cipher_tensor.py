@@ -1,0 +1,138 @@
+"""Bulk limb codec + CipherTensor lazy materialization: property tests.
+
+The limb-resident pipeline rests on two host-boundary contracts:
+
+* ``bigint.from_ints``/``to_ints`` (the bulk codec) are exact mutual
+  inverses and agree with the per-element ``from_int``/``to_int``
+  reference — across key sizes 256/512/1024 and batch shapes including
+  the degenerate B=0 and B=1;
+* a :class:`CipherTensor` is transparent: lazy, cached ``to_ints()``
+  returns exactly the ints it was built from, and every access path
+  (iteration, indexing, slicing, concat, equality) agrees with the plain
+  int list — while pure limb-space use never materializes at all.
+"""
+import random
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import bigint as bi
+from repro.core import cipher_tensor as ctm
+from repro.core import paillier as gold
+from repro.core import paillier_batch as pb
+from repro.core.cipher_tensor import CipherTensor
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+KEY_BITS = (256, 512, 1024)
+KEYS = {bits: gold.keygen(bits, random.Random(bits)) for bits in KEY_BITS}
+BKS = {bits: pb.make_batch_key(key) for bits, key in KEYS.items()}
+BATCH_SIZES = (0, 1, 2, 7, 16)
+
+
+def _values(bits: int, batch: int, seed: int) -> list[int]:
+    """Ciphertext-ranged values (mod n^2) incl. the 0 / n^2-1 boundaries."""
+    key = KEYS[bits]
+    rng = random.Random(seed * 31 + bits)
+    vals = [rng.randrange(key.n2) for _ in range(batch)]
+    if batch >= 2:
+        vals[0], vals[-1] = 0, key.n2 - 1
+    return vals
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(BATCH_SIZES))
+def test_bulk_codec_roundtrip_across_key_sizes(seed, batch):
+    for bits in KEY_BITS:
+        L = BKS[bits].vk.pack_n2.L16
+        vals = _values(bits, batch, seed)
+        limbs = bi.from_ints(vals, L)
+        assert limbs.shape == (batch, L) and limbs.dtype == np.int32
+        assert bi.to_ints(limbs) == vals, (bits, batch)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from((1, 2, 7)))
+def test_bulk_codec_matches_per_element_reference(seed, batch):
+    """The vectorized encode/decode equals limb-at-a-time from_int/to_int."""
+    for bits in (256, 1024):
+        L = BKS[bits].vk.pack_n2.L16
+        vals = _values(bits, batch, seed)
+        bulk = bi.from_ints(vals, L)
+        ref = np.stack([bi.from_int(v, L) for v in vals])
+        assert np.array_equal(bulk, ref), bits
+        assert [bi.to_int(row) for row in bulk] == bi.to_ints(bulk)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(BATCH_SIZES))
+def test_cipher_tensor_lazy_materialization_equivalence(seed, batch):
+    for bits in KEY_BITS:
+        bk = BKS[bits]
+        vals = _values(bits, batch, seed)
+        # built from raw limbs: nothing materialized until asked
+        ct = CipherTensor(
+            bk, jnp.asarray(bi.from_ints(vals, bk.vk.pack_n2.L16)))
+        assert len(ct) == batch and not ct.ints_materialized
+        assert ct.to_ints() == vals
+        assert ct.ints_materialized          # cached from here on
+        assert list(ct) == vals == ct.to_ints()
+        assert ct == vals
+        if batch:
+            assert ct[0] == vals[0] and ct[-1] == vals[-1]
+        half = ct[: batch // 2]
+        assert isinstance(half, CipherTensor)
+        assert half.to_ints() == vals[: batch // 2]
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_cipher_tensor_concat_and_slicing_stay_resident(seed):
+    bk = BKS[256]
+    a = _values(256, 3, seed)
+    b = _values(256, 5, seed + 1)
+    L = bk.vk.pack_n2.L16
+    ca = CipherTensor(bk, jnp.asarray(bi.from_ints(a, L)))
+    cb = CipherTensor(bk, jnp.asarray(bi.from_ints(b, L)))
+    cat = ctm.concat([ca, cb])
+    sliced = cat[2:6]
+    # concat and slice are pure limb ops — no host conversion yet
+    assert not any(c.ints_materialized for c in (ca, cb, cat, sliced))
+    assert cat.to_ints() == a + b
+    assert sliced.to_ints() == (a + b)[2:6]
+
+
+def test_cipher_tensor_from_ints_roundtrip_b0_b1():
+    for bits in KEY_BITS:
+        bk = BKS[bits]
+        empty = CipherTensor.from_ints(bk, [])
+        assert len(empty) == 0 and empty.to_ints() == []
+        assert empty.shape == (0, bk.vk.pack_n2.L16)
+        one = CipherTensor.from_ints(bk, [KEYS[bits].n2 - 1])
+        assert len(one) == 1 and one.to_ints() == [KEYS[bits].n2 - 1]
+        assert one[0] == KEYS[bits].n2 - 1
+
+
+def test_bulk_codec_error_parity_with_from_int():
+    """The bulk encoder raises the same ValueErrors as from_int."""
+    with pytest.raises(ValueError, match="nonnegative"):
+        bi.from_ints([3, -1], 4)
+    with pytest.raises(ValueError, match="does not fit"):
+        bi.from_ints([1 << 64], 4)
+    with pytest.raises(ValueError, match="nonnegative"):
+        bi.from_int(-1, 4)
+    with pytest.raises(ValueError, match="does not fit"):
+        bi.from_int(1 << 64, 4)
+
+
+def test_conversion_stats_track_materialization():
+    bk = BKS[256]
+    prev = ctm.reset_conversion_stats()
+    assert set(prev) == {"to_ints", "from_ints"}
+    ct = CipherTensor.from_ints(bk, [1, 2, 3])
+    assert ctm.CONVERSIONS == {"from_ints": 1, "to_ints": 0}
+    ct.to_ints(), ct.to_ints()               # second hit is cached
+    assert ctm.CONVERSIONS == {"from_ints": 1, "to_ints": 0}  # ints known
+    raw = CipherTensor(bk, ct.limbs)
+    raw.to_ints(), raw.to_ints()
+    assert ctm.CONVERSIONS == {"from_ints": 1, "to_ints": 1}
+    ctm.reset_conversion_stats()

@@ -99,6 +99,67 @@ def test_calibration_keyed_by_device_kind(tmp_path):
                         "gold", 128, 8)
 
 
+FAKE_ENTRY = {"enc": 1.0, "add": 1.0, "matvec": 1.0, "dec": 1.0,
+              "convert": 0.0}
+
+
+def test_calibrate_recovers_from_corrupted_or_partial_cache(tmp_path,
+                                                            monkeypatch):
+    """A corrupted/partial cache file must fall back to calibrating, not
+    crash the load (regression for the TABLE_VERSION 3 format change)."""
+    monkeypatch.setattr(dispatch, "_measure_backend",
+                        lambda *a, **kw: dict(FAKE_ENTRY))
+    path = tmp_path / "calib.json"
+    bad_files = (
+        b"{truncated",                                   # invalid JSON
+        b"[1, 2, 3]",                                    # wrong top type
+        b'"a string"',
+        json.dumps({"version": dispatch.TABLE_VERSION,
+                    "entries": "nope"}).encode(),        # entries not a dict
+        json.dumps({"version": dispatch.TABLE_VERSION,
+                    "entries": {"cpu/plain/0/8": 7}}).encode(),  # bad entry
+        json.dumps({"version": 1, "entries": {}}).encode(),      # stale v1
+    )
+    for bad in bad_files:
+        path.write_bytes(bad)
+        t = dispatch.calibrate(key_bits=(64,), batch_sizes=(8,),
+                               backends=("plain",), path=str(path))
+        assert t["version"] == dispatch.TABLE_VERSION, bad
+        assert dispatch.lookup(t, "plain", 0, 8) == FAKE_ENTRY, bad
+        # the file was rewritten valid and reloads cleanly
+        assert json.load(open(path))["entries"] == t["entries"], bad
+
+
+def test_legacy_3part_cache_entries_still_resolve_as_wildcards(tmp_path):
+    """Hand-built/migrated v3 files may carry device-less 3-part keys;
+    after the device-keyed format they must keep matching any device."""
+    path = tmp_path / "calib.json"
+    legacy = {"version": dispatch.TABLE_VERSION,
+              "entries": {"gold/128/8": dict(FAKE_ENTRY)}}
+    path.write_text(json.dumps(legacy))
+    t = dispatch.calibrate(backends=(), path=str(path))   # pure load
+    assert dispatch.lookup(t, "gold", 128, 8) == FAKE_ENTRY
+    assert dispatch.lookup(t, "gold", 128, 8, device="tpu") == FAKE_ENTRY
+
+
+def test_calibrate_warm_key_invokes_warmup_hook(tmp_path, monkeypatch):
+    """warm_key pre-compiles the batched path even on a full cache hit."""
+    calls = []
+    monkeypatch.setattr(dispatch.pb, "warmup",
+                        lambda bk, shapes, **kw: calls.append(
+                            (bk.key, tuple(shapes))))
+    monkeypatch.setattr(dispatch, "_measure_backend",
+                        lambda *a, **kw: dict(FAKE_ENTRY))
+    key = gold.keygen(96, random.Random(0))
+    path = str(tmp_path / "calib.json")
+    dispatch.calibrate(key_bits=(96,), batch_sizes=(8,), backends=("plain",),
+                       path=path, warm_key=key)
+    assert calls == [(key, (8,))]            # shapes default to batch_sizes
+    dispatch.calibrate(key_bits=(96,), batch_sizes=(8,), backends=("plain",),
+                       path=path, warm_key=key, warm_shapes=(4, (1, 2, 3)))
+    assert calls[1] == (key, (4, (1, 2, 3)))  # cache hit still warms
+
+
 def test_cost_model():
     cm = dispatch.CostModel()
     assert cm.edge_step_cost(8) > 0
@@ -183,6 +244,50 @@ def test_coalesce_gold_add_and_dec_groups():
     _drain(sched)
     assert list(out["d"]) == [11, 22, 33]
     assert list(out["d2"]) == [20, 40, 60]
+
+
+def test_coalesce_hold_merges_cross_tick_singletons():
+    """hold_ticks > 0: a lone op waits for same-shaped company arriving a
+    few ticks later and both run as ONE launch; without holding each
+    flushes in its own tick."""
+    m = np.arange(8, dtype=np.int64)
+
+    def run(hold):
+        box = protocol.PlainBox(SPEC, 8, counter=protocol.OpCounter())
+        sched = Scheduler()
+        cq = CoalesceQueue(sched, box, counter=box.counter, tick_s=1e-4,
+                           hold_ticks=hold)
+        got = {}
+        cq.submit("enc", (m,), lambda c: got.setdefault(0, c))
+        sched.at(3e-4, lambda: cq.submit("enc", (m + 1,),
+                                         lambda c: got.setdefault(1, c)))
+        sched.run()
+        assert np.array_equal(got[0], box.encrypt(m))
+        assert np.array_equal(got[1], box.encrypt(m + 1))
+        return cq
+
+    held = run(hold=10)
+    assert (held.launches, held.coalesced_ops, held.held_flushes) == (1, 2, 1)
+    flat = run(hold=0)
+    assert (flat.launches, flat.coalesced_ops, flat.held_flushes) == (2, 0, 0)
+
+
+def test_coalesce_hold_horizon_bounds_the_wait():
+    """An op that never gets company still flushes — at the hold horizon,
+    not never — and a later lone op opens a fresh hold window."""
+    box = protocol.PlainBox(SPEC, 4, counter=protocol.OpCounter())
+    sched = Scheduler()
+    cq = CoalesceQueue(sched, box, counter=box.counter, tick_s=1e-4,
+                       hold_ticks=5)
+    got = []
+    cq.submit("enc", (np.arange(4, dtype=np.int64),), got.append)
+    sched.run()
+    assert len(got) == 1 and sched.now <= 7e-4   # flushed at the horizon
+    assert cq.launches == 1 and cq.coalesced_ops == 0
+    # second lonely op: its own window, its own horizon
+    cq.submit("enc", (np.arange(4, dtype=np.int64),), got.append)
+    sched.run()
+    assert len(got) == 2 and cq.held_flushes == 2
 
 
 def test_c_matvec_many_matches_per_edge_matvec():

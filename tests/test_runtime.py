@@ -197,6 +197,43 @@ def test_tiny_deadline_without_latency_fn_keeps_advancing(inst):
                for t in range(24, 30))
 
 
+def test_deadline_hold_coalesces_straggler_ops_across_iterations(inst):
+    """ROADMAP follow-up: with ``coalesce_hold_ticks`` the queue no longer
+    flushes a late edge's ops in their own tick.  K=2 with edge1 one
+    deadline behind (slow link): edge0's lone eq. (13) ops hold until the
+    straggler's matching op arrives — including ops of the NEXT iteration
+    merging with the straggler's previous-round chain — so total launches
+    drop and per-launch batches grow.  Results stay a valid bounded-lag
+    trajectory either way."""
+    cfg = protocol.ProtocolConfig(
+        K=2, lam=0.05, iters=10, spec=SPEC, cipher="plain", seed=0,
+        deadline=0.02, latency_fn=lambda k, t: 0.0)
+    per_link = {("master", "edge1"): LinkModel(latency_s=15e-3)}
+    runs = {hold: run_on_runtime(inst.A, inst.y, cfg, per_link=per_link,
+                                 coalesce_hold_ticks=hold, tick_s=1e-3)
+            for hold in (0, 16)}
+    rt0 = runs[0].stats["runtime"]
+    rt_h = runs[16].stats["runtime"]
+    assert rt0["held_flushes"] == 0
+    assert rt_h["held_flushes"] > 0
+    assert rt_h["launches"] < rt0["launches"]
+    assert rt_h["coalesced_ops"] > rt0["coalesced_ops"]
+    # the straggler kept the protocol in bounded-staleness mode
+    assert runs[16].stale_events > 0
+    # holding delays ops, never corrupts them: the iterate still lands on
+    # the synchronous trajectory's neighborhood
+    sync = run_on_runtime(inst.A, inst.y, protocol.ProtocolConfig(
+        K=2, lam=0.05, iters=10, spec=SPEC, cipher="plain", seed=0))
+    for r in runs.values():
+        assert float(np.max(np.abs(r.x - sync.x))) < 0.5
+
+
+def test_sync_mode_defaults_keep_flush_every_tick(inst):
+    """hold_ticks defaults to 0: unchanged semantics for existing runs."""
+    r = run_on_runtime(inst.A, inst.y, _cfg(iters=3))
+    assert r.stats["runtime"]["held_flushes"] == 0
+
+
 def test_run_protocol_delegates_deadline_to_runtime(inst):
     """The public straggler knob survives on ProtocolConfig but now runs
     on the runtime (stats carry the runtime section)."""
