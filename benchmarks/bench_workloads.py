@@ -1,0 +1,176 @@
+"""Workload-zoo sweep: every registered ADMM family through the protocol.
+
+Beyond-paper: the abstract's "multiple edge nodes use distributed data to
+train a global model" generalized over ``repro.workloads`` (lasso / ridge
+/ elastic_net / logistic / power_grid).  Two sections:
+
+* **accuracy** — workloads x K in {4, 16, 64}: the quantized protocol
+  (plain cipher — the bit-exact functional simulation, so K=64 stays
+  fast) vs the PLAINTEXT distributed float baseline
+  (``workloads.simulate_float``) running the identical iteration without
+  quantization.  Records MSE between the two solutions, both objectives,
+  the workload's own metrics, and a ``within_tol`` verdict (the
+  quantization-only gap must stay below ``TOL_MSE``).  Quantization
+  ranges come from each workload's calibrator, so this also exercises
+  the Theorem-1 in-range contract at every K.
+
+* **cipher arms** — per workload at K=4 (tiny iters): wall-clock of the
+  four encrypted arms (scalar gold / batched gold / vec / adaptive) over
+  the same instance, all bit-identical to plain (asserted).  The
+  adaptive arm prices routing from a synthetic two-entry table (as
+  tests/test_conformance.py does) to keep the bench calibration-free.
+
+Emits ``BENCH_workloads.json`` + the harness CSV rows.  Run directly::
+
+  PYTHONPATH=src python benchmarks/bench_workloads.py
+
+or via ``python -m benchmarks.run --bench workloads [--smoke]`` —
+``--smoke`` shrinks dims/iters to CI-sized (~tens of seconds).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro import workloads
+from repro.core import protocol
+from repro.workloads.base import simulate_float
+try:
+    from .common import emit
+except ImportError:          # direct script run
+    from common import emit
+
+EDGE_COUNTS = (4, 16, 64)
+M, N, ITERS = 96, 128, 40
+ARM_ITERS, ARM_KEY_BITS = 3, 128
+TOL_MSE = 1e-4            # quantized-vs-float solution gap at delta=1e6
+OUT = "BENCH_workloads.json"
+OUT_SMOKE = "BENCH_workloads_smoke.json"   # never clobber the full artifact
+
+
+def _arm_cfgs(wl, spec, iters: int):
+    base = dict(K=4, iters=iters, spec=spec, seed=0, workload=wl.name,
+                key_bits=ARM_KEY_BITS, rho=wl.rho, lam=wl.lam)
+    return {
+        "gold_scalar": protocol.ProtocolConfig(cipher="gold",
+                                               gold_batch=False, **base),
+        "gold_batch": protocol.ProtocolConfig(cipher="gold",
+                                              gold_batch=True, **base),
+        "vec": protocol.ProtocolConfig(cipher="vec", **base),
+        "auto": protocol.ProtocolConfig(cipher="auto", **base),
+    }
+
+
+def _synthetic_table():
+    """Two-entry routing table (no on-disk calibration in a bench run)."""
+    return {"version": 1, "entries": {
+        f"gold/{ARM_KEY_BITS}/8": {"enc": 1e-6, "dec": 1e-6, "add": 1e-3,
+                                   "matvec": 1e-3, "convert": 1e-8},
+        f"vec/{ARM_KEY_BITS}/8": {"enc": 1e-3, "dec": 1e-3, "add": 1e-6,
+                                  "matvec": 1e-6, "convert": 1e-8},
+    }}
+
+
+def _accuracy_sweep(rows, name, wl, edge_counts, m, n, iters):
+    out = []
+    for K in edge_counts:
+        inst = wl.make_instance(m, n, K, seed=0)
+        spec = wl.calibrate_spec(inst.A, inst.y, K, iters)
+        xf, _ = simulate_float(wl, inst.A, inst.y, K, iters)
+        cfg = protocol.ProtocolConfig(
+            K=K, rho=wl.rho, lam=wl.lam, iters=iters, spec=spec,
+            cipher="plain", seed=0, workload=name)
+        r = protocol.run_protocol(inst.A, inst.y, cfg, workload=wl)
+        mse = float(np.mean((r.x - xf) ** 2))
+        obj_q = wl.objective(inst.A, inst.y, r.x)
+        obj_f = wl.objective(inst.A, inst.y, xf)
+        entry = {
+            "workload": name, "edges": K,
+            "mse_vs_float_baseline": mse,
+            "objective_protocol": obj_q,
+            "objective_float_baseline": obj_f,
+            "objective_rel_gap": abs(obj_q - obj_f) / max(abs(obj_f), 1e-12),
+            "quant_range": [spec.zmin, spec.zmax],
+            "within_tol": bool(mse < TOL_MSE),
+            "metrics": wl.metrics(inst, r.x),
+        }
+        out.append(entry)
+        emit(rows, f"workloads_{name}_K{K}", 0.0,
+             derived=f"mse_vs_float={mse:.3e};within_tol={entry['within_tol']}")
+    return out
+
+
+def _arm_walls(rows, name, wl, m, n, iters):
+    inst = wl.make_instance(m, n, 4, seed=0)
+    spec = wl.calibrate_spec(inst.A, inst.y, 4, iters)
+    plain = protocol.run_protocol(
+        inst.A, inst.y, protocol.ProtocolConfig(
+            K=4, rho=wl.rho, lam=wl.lam, iters=iters, spec=spec,
+            cipher="plain", seed=0, workload=name), workload=wl)
+    out = {}
+    for arm, cfg in _arm_cfgs(wl, spec, iters).items():
+        t0 = time.perf_counter()
+        if arm == "auto":
+            from repro.runtime.runner import run_on_runtime
+            r = run_on_runtime(inst.A, inst.y, cfg, workload=wl,
+                               table=_synthetic_table())
+        else:
+            r = protocol.run_protocol(inst.A, inst.y, cfg, workload=wl)
+        wall = time.perf_counter() - t0
+        bit_exact = bool(np.array_equal(r.history, plain.history))
+        out[arm] = {"wall_s": wall, "bit_exact": bit_exact}
+        emit(rows, f"workloads_{name}_arm_{arm}", wall,
+             derived=f"bit_exact={bit_exact}")
+    return out
+
+
+def run(rows: list, smoke: bool = False) -> None:
+    edge_counts = (4,) if smoke else EDGE_COUNTS
+    m, n, iters = (24, 16, 4) if smoke else (M, N, ITERS)
+    arm_iters = 2 if smoke else ARM_ITERS
+    accuracy, arms = [], {}
+    for name in workloads.names():   # registry-driven: new families ride in
+        wl = workloads.get_default(name)
+        accuracy.extend(_accuracy_sweep(rows, name, wl, edge_counts,
+                                        m, n, iters))
+        if smoke:   # CI-sized: one encrypted arm proves the crypto path
+            arms[name] = _arm_walls_smoke(rows, name, wl, m, n, arm_iters)
+        else:
+            arms[name] = _arm_walls(rows, name, wl, 24, 32, arm_iters)
+    with open(OUT_SMOKE if smoke else OUT, "w") as f:
+        json.dump({"dims": {"M": m, "N": n, "iters": iters,
+                            "edge_counts": list(edge_counts),
+                            "smoke": smoke},
+                   "tol_mse": TOL_MSE,
+                   "accuracy": accuracy,
+                   "cipher_arms": arms}, f, indent=1)
+
+
+def _arm_walls_smoke(rows, name, wl, m, n, iters):
+    """Smoke: one encrypted arm (batched gold) proves the crypto path."""
+    inst = wl.make_instance(m, n, 4, seed=0)
+    spec = wl.calibrate_spec(inst.A, inst.y, 4, iters)
+    kw = dict(K=4, rho=wl.rho, lam=wl.lam, iters=iters, spec=spec,
+              seed=0, workload=name)
+    plain = protocol.run_protocol(
+        inst.A, inst.y,
+        protocol.ProtocolConfig(cipher="plain", **kw), workload=wl)
+    t0 = time.perf_counter()
+    r = protocol.run_protocol(
+        inst.A, inst.y,
+        protocol.ProtocolConfig(cipher="gold", key_bits=ARM_KEY_BITS,
+                                gold_batch=True, **kw), workload=wl)
+    wall = time.perf_counter() - t0
+    bit_exact = bool(np.array_equal(r.history, plain.history))
+    emit(rows, f"workloads_{name}_arm_gold_batch", wall,
+         derived=f"bit_exact={bit_exact}")
+    return {"gold_batch": {"wall_s": wall, "bit_exact": bit_exact}}
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("\n".join(rows))
+    print(f"wrote {OUT}")

@@ -34,6 +34,8 @@ BENCHES = [
      "roofline rows from the dry-run report (deliverable g)"),
     ("topo", "bench_topology",
      "topology x K sweep (K<=128) + batched-gold speedup (beyond-paper)"),
+    ("workloads", "bench_workloads",
+     "ADMM workload zoo x K sweep through the protocol (beyond-paper)"),
 ]
 
 
@@ -49,8 +51,12 @@ def main() -> None:
         epilog="registered benches (see benchmarks/README.md for what each\n"
                "reproduces, expected runtimes and output schemas):\n\n"
                + "\n".join(_registry_lines()))
-    ap.add_argument("--only", default=None, metavar="KEYS",
+    ap.add_argument("--only", "--bench", dest="only", default=None,
+                    metavar="KEYS",
                     help="comma-separated bench keys, e.g. fig5,tab2,topo")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-dims mode for benches that support it "
+                         "(currently: workloads) — CI-sized smoke runs")
     ap.add_argument("--list", action="store_true",
                     help="print the registered bench keys and exit")
     args = ap.parse_args()
@@ -64,6 +70,7 @@ def main() -> None:
                  f"(--list shows the registry)")
 
     import importlib
+    import inspect
     rows: list[str] = ["name,us_per_call,derived"]
     print(rows[0])
     for key, mod_name, _ in BENCHES:
@@ -72,8 +79,11 @@ def main() -> None:
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         t0 = time.time()
         before = len(rows)
+        kw = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kw["smoke"] = True
         try:
-            mod.run(rows)
+            mod.run(rows, **kw)
         except Exception as e:  # noqa: BLE001
             rows.append(f"{key}_ERROR,0,{type(e).__name__}:{e}")
         for r in rows[before:]:

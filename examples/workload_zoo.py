@@ -1,0 +1,41 @@
+"""Workload zoo: every registered ADMM family through the privacy protocol.
+
+One pass over ``repro.workloads`` — lasso, ridge, elastic_net, logistic
+(the abstract's "train a global model" scenario) and power_grid — each
+running end-to-end through 3P-ADMM-PC2 with real Paillier encryption
+(batched gold arm, small demo key) against its plaintext distributed
+float baseline and its convergence reference.
+
+Run:  PYTHONPATH=src python examples/workload_zoo.py
+"""
+import numpy as np
+
+from repro import workloads
+from repro.core import protocol
+from repro.workloads.base import simulate_float
+
+M, N, K, ITERS = 48, 32, 4, 30
+
+print(f"{'workload':<12} {'obj(private)':>13} {'obj(float)':>11} "
+      f"{'|x_priv - x_float|':>18} {'|x_float - ref|':>15}  metrics")
+for name in workloads.names():   # registry-driven: new families ride in
+    wl = workloads.get_default(name)
+    inst = wl.make_instance(M, N, K, seed=0)
+    # quantization range calibrated from the data (Theorem-1 contract)
+    spec = wl.calibrate_spec(inst.A, inst.y, K, ITERS)
+    cfg = protocol.ProtocolConfig(K=K, rho=wl.rho, lam=wl.lam, iters=ITERS,
+                                  spec=spec, cipher="gold", key_bits=256,
+                                  seed=0, workload=name)
+    r = protocol.run_protocol(inst.A, inst.y, cfg, workload=wl)
+    xf, _ = simulate_float(wl, inst.A, inst.y, K, ITERS)
+    ref = wl.reference_solution(inst.A, inst.y, K)
+    gap_q = float(np.max(np.abs(r.x - xf)))          # quantization only
+    gap_c = float(np.max(np.abs(xf - ref)))          # convergence distance
+    mets = {k: round(v, 4) for k, v in wl.metrics(inst, r.x).items()
+            if k != "objective"}
+    print(f"{name:<12} {wl.objective(inst.A, inst.y, r.x):>13.5f} "
+          f"{wl.objective(inst.A, inst.y, xf):>11.5f} {gap_q:>18.2e} "
+          f"{gap_c:>15.2e}  {mets}")
+    assert gap_q < 1e-2, (name, gap_q)
+print("OK — every family ran privately, within quantization error of its "
+      "plaintext baseline")

@@ -411,7 +411,14 @@ def warmup(bk: BatchKey, shapes: Sequence,
     matvec at both 1- and 2-limb exponent widths (the Gamma_2 value range).
     Dummy operands (m=0, r=1, c=1) exercise identical graph shapes to real
     traffic.  Returns ``{"calls", "seconds"}`` telemetry.
+
+    Compiles persist across PROCESSES too: the persistent XLA compile
+    cache (``kernels.compile_cache``, ``~/.cache/repro/jax_cache``,
+    opt-out ``REPRO_NO_COMPILE_CACHE=1``) is enabled here, so a warm
+    cache turns the lowering work below into deserialization.
     """
+    from ..kernels import compile_cache
+    compile_cache.enable()
     t0 = time.perf_counter()
     calls = 0
     for shape in shapes:

@@ -164,9 +164,23 @@ def decrypt_batch(vk: VecKey, c_limbs: jax.Array,
                   backend: str | None = None) -> jax.Array:
     """Ciphertext limbs (B, Ln2) -> int64 plaintexts (B,).
 
+    Narrow legacy form: plaintexts MUST fit 63 bits or they silently
+    wrap (``limbs_to_int64``).  Callers whose plaintexts can exceed that
+    — any key over ~62 bits running the full Theorem-1 chain at large
+    Delta — use :func:`decrypt_batch_limbs` and decode the limbs
+    losslessly (``bigint.to_ints``), as ``protocol.VecBox`` does.
+    """
+    return limbs_to_int64(decrypt_batch_limbs(vk, c_limbs, backend=backend))
+
+
+def decrypt_batch_limbs(vk: VecKey, c_limbs: jax.Array,
+                        backend: str | None = None) -> jax.Array:
+    """Ciphertext limbs (B, Ln2) -> plaintext limbs (B, Ln), full width.
+
     c^lam is computed in the two half-width spaces (the paper's CRT
     acceleration) and recombined; L(x) = (x-1)/n is an exact division done
     multiplicatively via n^{-1} mod 2^k (no big-int division circuit).
+    The result is the complete residue mod n — no 63-bit truncation.
     """
     return _cached_jit(vk, f"dec_{backend}",
                        lambda c: _decrypt_impl(vk, c, backend))(c_limbs)
@@ -192,11 +206,10 @@ def _decrypt_impl(vk: VecKey, c_limbs: jax.Array,
     alpha = bi.mul(_fit(xm1, k_limbs),
                    jnp.broadcast_to(jnp.asarray(ninv), (B, k_limbs)),
                    out_limbs=k_limbs)
-    # m = alpha * mu mod n
-    m = ops.mulmod(_fit(alpha, Ln),
-                   jnp.broadcast_to(jnp.asarray(vk.mu_limbs), (B, Ln)),
-                   vk.pack_n, backend=backend)
-    return limbs_to_int64(m)
+    # m = alpha * mu mod n (full limb width; wrappers narrow if asked)
+    return ops.mulmod(_fit(alpha, Ln),
+                      jnp.broadcast_to(jnp.asarray(vk.mu_limbs), (B, Ln)),
+                      vk.pack_n, backend=backend)
 
 
 def _reduce_into(c: jax.Array, pack: ops.ModulusPack, backend) -> jax.Array:

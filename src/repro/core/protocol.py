@@ -8,9 +8,17 @@ Faithful implementation of Algorithms 1 & 3 with explicit message passing:
   * Data-security-sharing  — master quantizes+encrypts B_k A_k^T y (eq. 11);
     edge k stores the ciphertext alpha-hat.
   * Parallel privacy-computing — per iteration the master encrypts
-    Gamma_2(z_k), Gamma_2(-v_k); edge k evaluates eq. (13) entirely in
+    Gamma_2(u1_k), Gamma_2(u2_k); edge k evaluates eq. (13) entirely in
     ciphertext (one ⊕, one ⊗-matvec, one ⊕); master decrypts, dequantizes by
-    Theorem 1 and runs the z/v updates (10b-c).
+    Theorem 1 and runs the workload's plaintext global update (10b-c).
+
+The iteration loop is WORKLOAD-GENERIC (``repro.workloads``): which
+vectors/matrices fill the (u1, u2, u3, C) slots of the affine ciphertext
+map is the problem family's business — LASSO (the paper's problem,
+bit-compatible with the historical hard-coded loop: u1 = z_k, u2 = -v_k,
+C = rho B_k), ridge, elastic_net, logistic consensus training,
+power_grid.  The encrypted interaction pattern, accounting and
+collaborative (Algorithm-3) machinery are identical for all of them.
 
 Cipher backends share one interface so the protocol logic is written once:
 
@@ -47,7 +55,6 @@ from typing import Callable
 import numpy as np
 import jax.numpy as jnp
 
-from . import admm as admm_mod
 from . import cipher_tensor as ct_mod
 from . import paillier as gold
 from . import paillier_batch as pb
@@ -55,6 +62,7 @@ from . import paillier_vec as pv
 from . import bigint as bi
 from .cipher_tensor import CipherTensor
 from .quantization import QuantSpec, gamma1, gamma2, dequantize_theorem1
+from .. import workloads as workloads_mod
 
 
 # ---------------------------------------------------------------------------
@@ -193,12 +201,21 @@ class GoldBox:
 
 
 class VecBox:
-    """Batched limb-kernel Paillier (the accelerated EP path)."""
+    """Batched limb-kernel Paillier (the accelerated EP path).
+
+    ``plain_bits`` bounds the plaintexts this box will decrypt (the
+    Theorem-1 chain width, ``QuantSpec.plaintext_bits``); when the bound
+    fits int64 decryption keeps the in-graph ``limbs_to_int64`` fast
+    path, otherwise plaintext limbs decode losslessly through the bulk
+    ``bigint`` codec.  ``None`` falls back to the key width (safe for
+    any plaintext the ring admits).
+    """
 
     name = "vec"
 
     def __init__(self, key: gold.PaillierKey, rng: random.Random,
-                 backend: str | None = None, counter=None):
+                 backend: str | None = None, counter=None,
+                 plain_bits: int | None = None):
         # share the limb-packed key (and thus the per-VecKey jit caches)
         # with any GoldBox over the same key via the make_batch_key cache
         self._bk = pb.make_batch_key(key)
@@ -207,6 +224,8 @@ class VecBox:
         self.rng = rng
         self.backend = backend
         self.counter = counter or OpCounter()
+        self.plain_bits = key.n.bit_length() if plain_bits is None \
+            else plain_bits
 
     def encrypt(self, m: np.ndarray):
         m = np.asarray(m).reshape(-1)
@@ -234,8 +253,23 @@ class VecBox:
                            backend=self.backend)
 
     def decrypt(self, c) -> np.ndarray:
+        """Limb-in decryption with a full-width plaintext return path.
+
+        Accepts a raw limb array or a :class:`CipherTensor` (decrypted
+        straight off its resident limbs).  When the plaintext bound
+        (``plain_bits``) exceeds 62 bits the plaintext limbs decode
+        losslessly through the bulk ``bigint.to_ints`` codec (object-int
+        array) instead of the wrapping ``limbs_to_int64`` narrowing —
+        Theorem-1 chains above int64 (large Delta x large N) decrypt
+        exactly, while the common small-chain case keeps the in-graph
+        int64 path."""
+        if isinstance(c, CipherTensor):
+            c = c.limbs
         self.counter.bump("dec", int(c.shape[0]))
-        return np.asarray(pv.decrypt_batch(self.vk, c, backend=self.backend))
+        m_limbs = pv.decrypt_batch_limbs(self.vk, c, backend=self.backend)
+        if self.plain_bits <= 62:           # every plaintext fits int64
+            return np.asarray(pv.limbs_to_int64(m_limbs))
+        return np.array(bi.to_ints(np.asarray(m_limbs)), dtype=object)
 
     def ct_bytes(self, n_el: int) -> int:
         return (self.key.n2.bit_length() + 7) // 8 * n_el
@@ -266,6 +300,7 @@ class ProtocolConfig:
     lam: float = 1.0
     iters: int = 50
     spec: QuantSpec = QuantSpec()
+    workload: str = "lasso"            # repro.workloads registry name
     cipher: str = "plain"              # plain | gold | vec | auto
     key_bits: int = 256
     crt: bool = True
@@ -317,10 +352,15 @@ class EdgeNode:
         self.collab_backend = None
 
     # -- Initialization phase -------------------------------------------
-    def init_phase(self, AkTAk: np.ndarray, rho: float) -> np.ndarray:
-        Nk = AkTAk.shape[0]
-        Bk = np.linalg.inv(AkTAk + rho * np.eye(Nk))
-        self.Gb = np.asarray(gamma2(Bk * rho, self.spec))
+    def init_phase(self, Qk: np.ndarray, mu: float,
+                   scale: float | None = None) -> np.ndarray:
+        """Invert the workload's shipped block: B_k = (Q_k + mu I)^{-1},
+        keeping Gamma_2(scale * B_k) (for LASSO: Q = A_k^T A_k, mu =
+        scale = rho — the historical signature's bit-exact behavior)."""
+        Nk = Qk.shape[0]
+        scale = mu if scale is None else scale
+        Bk = np.linalg.inv(Qk + mu * np.eye(Nk))
+        self.Gb = np.asarray(gamma2(Bk * scale, self.spec))
         return Bk
 
     # -- Data security sharing phase -------------------------------------
@@ -408,19 +448,38 @@ def make_box(cfg: ProtocolConfig, n_dim: int, rng: random.Random,
                        kernel_backend=cfg.kernel_backend), key
     if cfg.cipher == "vec":
         return VecBox(key, rng, backend=cfg.kernel_backend,
-                      counter=counter), key
+                      counter=counter,
+                      plain_bits=cfg.spec.plaintext_bits(n_dim)), key
     raise ValueError(cfg.cipher)
 
 
-def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
+def resolve_workload(cfg: ProtocolConfig,
+                     workload: "workloads_mod.Workload | None" = None
+                     ) -> "workloads_mod.Workload":
+    """The workload object for a run: an explicit instance wins, else the
+    registry entry named by ``cfg.workload`` built from cfg.rho/cfg.lam."""
+    if workload is not None:
+        return workload
+    return workloads_mod.get(cfg.workload, rho=cfg.rho, lam=cfg.lam)
+
+
+def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
+                 workload: "workloads_mod.Workload | None" = None
                  ) -> ProtocolResult:
-    """Run 3P-ADMM-PC2 end to end; master-node state lives in this frame."""
+    """Run 3P-ADMM-PC2 end to end; master-node state lives in this frame.
+
+    The iteration is workload-generic (see ``repro.workloads``): the
+    encrypted chain per edge per round is always enc(Γ₂ u1) ⊕ enc(Γ₂ u2),
+    ⊗ by the edge's Γ₂(C_k), ⊕ the stored Γ₁(u3_k) — only WHICH vectors
+    and matrices fill those slots is the workload's business.
+    """
     if cfg.deadline is not None or cfg.cipher == "auto":
         # straggler/deadline semantics and adaptive dispatch live in the
         # event-driven runtime; the loop below is the synchronous reference
         from ..runtime.runner import run_on_runtime
-        return run_on_runtime(A, y, cfg)
+        return run_on_runtime(A, y, cfg, workload=workload)
 
+    wl = resolve_workload(cfg, workload)
     rng = random.Random(cfg.seed)
     M, N = A.shape
     K = cfg.K
@@ -436,17 +495,17 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
     # --- Initialization phase -------------------------------------------
     counter.phase = "init"
     ys = y / K if cfg.y_scale == "consistent" else y
+    st = wl.init_state(np.asarray(A, np.float64),
+                       np.asarray(y, np.float64), ys, K)
     edges = [EdgeNode(k, spec) for k in range(K)]
-    Bks, Bbar_rowsums, alphas_real = [], [], []
+    C_rowsums, u3s = [], []
     for k, edge in enumerate(edges):
-        Ak = A[:, k * Nk:(k + 1) * Nk]
-        AkTAk = Ak.T @ Ak
-        traffic["master->edge"] += AkTAk.nbytes
-        Bk = edge.init_phase(AkTAk, cfg.rho)
+        Qk, mu, scale = wl.edge_setup(st, k)
+        traffic["master->edge"] += Qk.nbytes
+        Bk = edge.init_phase(Qk, mu, scale)
         traffic["edge->master"] += Bk.nbytes
-        Bks.append(Bk)
-        Bbar_rowsums.append((Bk * cfg.rho) @ np.ones(Nk))
-        alphas_real.append(Bk @ (Ak.T @ ys))
+        C_rowsums.append((Bk * scale) @ np.ones(Nk))
+        u3s.append(wl.share_vector(st, k, Bk))
         if cfg.collaborative and key is not None:
             edge.collab_setup(key.p2, key.phi_p2, key.g,
                               batch=cfg.gold_batch,
@@ -455,30 +514,27 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
     # --- Data security sharing phase -------------------------------------
     counter.phase = "share"
     for k, edge in enumerate(edges):
-        q_alpha = np.asarray(gamma1(alphas_real[k], spec))
+        q_alpha = np.asarray(gamma1(u3s[k], spec))
         c_alpha = box.encrypt(q_alpha)
         traffic["master->edge"] += box.ct_bytes(Nk)
         edge.store_shared(c_alpha)
 
     # --- Parallel privacy-computing phase ---------------------------------
     counter.phase = "iterate"
-    x_prev = np.zeros(N)
-    z = np.zeros(N)
-    v = np.zeros(N)
     history = np.zeros((cfg.iters, N))
 
     for t in range(cfg.iters):
         x_new = np.zeros(N)
         for k, edge in enumerate(edges):
             sl = slice(k * Nk, (k + 1) * Nk)
-            zk, vk = z[sl], v[sl]
-            qz = np.asarray(gamma2(zk, spec))
-            qv = np.asarray(gamma2(-vk, spec))
+            u1, u2 = wl.iter_inputs(st, k)
+            qz = np.asarray(gamma2(u1, spec))
+            qv = np.asarray(gamma2(u2, spec))
             cz = box.encrypt(qz)
             cv = box.encrypt(qv)
             traffic["master->edge"] += 2 * box.ct_bytes(Nk)
 
-            w_sum = float(np.sum(zk - vk))
+            w_sum = float(np.sum(u1 + u2))
             x_hat = edge.private_step(cz, cv, box)
             traffic["edge->master"] += box.ct_bytes(Nk)
 
@@ -489,19 +545,15 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig
 
             R = box.decrypt(x_hat).astype(np.float64)
             x_new[sl] = np.asarray(dequantize_theorem1(
-                R, Bbar_rowsums[k], w_sum, Nk, spec))
+                R, C_rowsums[k], w_sum, Nk, spec))
         # master updates (10b)/(10c) with the (t-1) iterate — Jacobi order
-        z_new = np.asarray(admm_mod.soft_threshold(
-            jnp.asarray(v + x_prev), cfg.lam / cfg.rho))
-        v = v + x_prev - z_new
-        z = z_new
-        x_prev = x_new
+        wl.global_update(st, x_new)
         history[t] = x_new
 
     stats = {"ops": counter.as_dict(), "traffic_bytes": dict(traffic),
              "key_bits": None if key is None else key.n.bit_length(),
-             "cipher": cfg.cipher}
-    return ProtocolResult(x=x_prev, history=history, stats=stats,
+             "cipher": cfg.cipher, "workload": wl.name}
+    return ProtocolResult(x=st.x_prev, history=history, stats=stats,
                           stale_events=0)
 
 

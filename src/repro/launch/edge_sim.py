@@ -7,6 +7,7 @@ coalescing/dispatch telemetry).
 
 Examples:
   python -m repro.launch.edge_sim --topology star --edges 8 --backend auto
+  python -m repro.launch.edge_sim --workload logistic --edges 4 --backend gold
   python -m repro.launch.edge_sim --topology ring --edges 16 --backend plain \
       --mode deadline --deadline 0.5 --slow-edge 3
   python -m repro.launch.edge_sim --topology hierarchical --edges 32 \
@@ -23,6 +24,7 @@ import json
 
 import numpy as np
 
+from repro import workloads
 from repro.core import protocol
 from repro.core.quantization import QuantSpec
 from repro.data.synthetic import make_lasso
@@ -37,6 +39,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--edges", type=int, default=8, help="K edge nodes")
     ap.add_argument("--backend", default="plain",
                     choices=["plain", "gold", "vec", "auto"])
+    ap.add_argument("--workload", default=None, choices=workloads.names(),
+                    help="ADMM problem family (repro.workloads registry); "
+                         "quantization range is auto-calibrated from the "
+                         "data. Default: the legacy LASSO setup with the "
+                         "fixed [-8, 8] range")
     ap.add_argument("--iters", type=int, default=12)
     ap.add_argument("--key-bits", type=int, default=128)
     ap.add_argument("--block", type=int, default=6,
@@ -61,7 +68,16 @@ def main(argv=None) -> dict:
     K = args.edges
     N = K * args.block
     M = max(N // 2, 8)
-    inst = make_lasso(M, N, sparsity=0.1, noise=0.01, seed=args.seed)
+    wl = None
+    if args.workload is not None:
+        wl = workloads.get(args.workload, rho=1.0, lam=0.05)
+        winst = wl.make_instance(M, N, K, seed=args.seed)
+        inst_A, inst_y, x_true = winst.A, winst.y, winst.x_true
+        spec = wl.calibrate_spec(inst_A, inst_y, K, args.iters)
+    else:   # legacy LASSO setup, fixed quantization range
+        inst = make_lasso(M, N, sparsity=0.1, noise=0.01, seed=args.seed)
+        inst_A, inst_y, x_true = inst.A, inst.y, inst.x_true
+        spec = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
 
     latency_fn = None
     if args.slow_edge is not None:
@@ -69,22 +85,24 @@ def main(argv=None) -> dict:
         latency_fn = (lambda k, t:
                       slow if k == args.slow_edge % K else base)
     cfg = protocol.ProtocolConfig(
-        K=K, lam=0.05, iters=args.iters,
-        spec=QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0),
+        K=K, lam=0.05, iters=args.iters, spec=spec,
+        workload=args.workload or "lasso",
         cipher=args.backend, key_bits=args.key_bits, seed=args.seed,
         deadline=args.deadline, latency_fn=latency_fn)
     link = LinkModel(bytes_per_s=args.bandwidth, latency_s=args.latency,
                      jitter_s=args.jitter, drop_prob=args.drop)
     r = run_on_runtime(
-        inst.A, inst.y, cfg,
+        inst_A, inst_y, cfg, workload=wl,
         topology=topo_mod.make(args.topology, K),
         link=link, mode=args.mode, calib_path=args.calib_cache)
 
     rstats = r.stats["runtime"]
     summary = {
         "topology": args.topology, "edges": K, "backend": args.backend,
+        "workload": args.workload or "lasso",
         "iters": args.iters,
-        "mse_vs_truth": float(np.mean((r.x - inst.x_true) ** 2)),
+        "mse_vs_truth": (float(np.mean((r.x - x_true) ** 2))
+                         if x_true is not None else None),
         "virtual_time_s": rstats["virtual_time"],
         "events": rstats["events"],
         "traffic_bytes": r.stats["traffic_bytes"],
@@ -93,6 +111,8 @@ def main(argv=None) -> dict:
         "coalesced_ops": rstats["coalesced_ops"],
         "kernel_launches": rstats["launches"],
     }
+    if wl is not None:
+        summary["workload_metrics"] = wl.metrics(winst, r.x)
     if "dispatch" in rstats:
         summary["dispatch_choices"] = rstats["dispatch"]
     print(json.dumps(summary, indent=1))

@@ -121,7 +121,9 @@ def _measure_backend(backend: str, key_bits: int, batch: int,
             # not silently fall back to (and mis-price as) the scalar loop
             box = protocol.GoldBox(key, rng, batch=True, batch_min=1)
         elif backend == "vec":
-            box = protocol.VecBox(key, rng)
+            # price the common case: chains that fit int64 (the wide
+            # object-int decode is the big-Delta exception, not the rule)
+            box = protocol.VecBox(key, rng, plain_bits=48)
         else:
             raise ValueError(backend)
     c = box.encrypt(m)
@@ -169,6 +171,8 @@ def calibrate(key_bits=(128,), batch_sizes=(8, 64),
     ``batch_sizes`` (ints warm enc/dec/⊕; ``(B, M, N)`` tuples warm the
     fused matvec).
     """
+    from ..kernels import compile_cache
+    compile_cache.enable()    # measured compiles persist across processes
     path = path or cache_path()
     table: dict = {"version": TABLE_VERSION, "entries": {}}
     if not force and os.path.exists(path):
@@ -299,7 +303,8 @@ class AdaptiveBox:
     name = "auto"
 
     def __init__(self, key: gold.PaillierKey, rng: random.Random,
-                 table: dict, counter=None, kernel_backend: str | None = None):
+                 table: dict, counter=None, kernel_backend: str | None = None,
+                 plain_bits: int | None = None):
         from ..core import protocol  # deferred: avoids import cycle
         self.key = key
         self.table = table
@@ -312,7 +317,8 @@ class AdaptiveBox:
                 key, rng, crt=True, counter=self.counter, batch=True,
                 batch_min=1, kernel_backend=kernel_backend),
             "vec": protocol.VecBox(key, rng, backend=kernel_backend,
-                                   counter=self.counter),
+                                   counter=self.counter,
+                                   plain_bits=plain_bits),
         }
         self.vec = self.boxes["vec"]
         self.choices: Counter = Counter()

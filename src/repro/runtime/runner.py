@@ -29,12 +29,12 @@ of the edge's homomorphic step.
 """
 from __future__ import annotations
 
+import math
 import random
 from functools import partial
 
 import numpy as np
 
-from ..core import admm as admm_mod
 from ..core import paillier as gold
 from ..core import protocol
 from ..core.quantization import gamma1, gamma2, dequantize_theorem1
@@ -43,8 +43,6 @@ from .coalesce import CoalesceQueue
 from .scheduler import Scheduler
 from .topology import MASTER, Topology, edge_name, star
 from .transport import LinkModel, Message, Transport
-
-import jax.numpy as jnp
 
 
 class EdgeActor:
@@ -59,8 +57,8 @@ class EdgeActor:
     def on_message(self, msg: Message) -> None:
         rt = self.rt
         if msg.tag == "init":
-            AkTAk, rho = msg.payload
-            Bk = self.node.init_phase(AkTAk, rho)
+            Qk, mu, scale = msg.payload
+            Bk = self.node.init_phase(Qk, mu, scale)
             rt.transport.send(self.name, MASTER, "init_ok", (self.k, Bk),
                               nbytes=Bk.nbytes)
         elif msg.tag == "collab":
@@ -98,28 +96,23 @@ class EdgeActor:
 
 
 class MasterActor:
-    def __init__(self, rt: "_Runtime", A: np.ndarray, y: np.ndarray):
+    def __init__(self, rt: "_Runtime", A: np.ndarray, y: np.ndarray,
+                 wl: "protocol.workloads_mod.Workload"):
         self.rt = rt
         cfg = rt.cfg
         self.A, self.y = A, y
         K, Nk = cfg.K, rt.nk
         ys = y / K if cfg.y_scale == "consistent" else y
-        self.AkTAk = []
-        self.Ak = []
-        for k in range(K):
-            Ak = A[:, k * Nk:(k + 1) * Nk]
-            self.Ak.append(Ak)
-            self.AkTAk.append(Ak.T @ Ak)
-        self.ys = ys
-        self.Bbar_rowsums: list = [None] * K
-        self.alphas_real: list = [None] * K
+        self.wl = wl
+        self.wst = wl.init_state(A, y, ys, K)   # workload iteration state
+        self.edge_setups = [wl.edge_setup(self.wst, k) for k in range(K)]
+        self.C_rowsums: list = [None] * K
+        self.u3s: list = [None] * K
         self._n_init = 0
         self._n_share = 0
-        # iterate-phase state (mirrors run_protocol's master frame)
+        # iterate-phase bookkeeping (mirrors run_protocol's master frame;
+        # the (x, z, v) triple itself lives in the workload state)
         N = A.shape[1]
-        self.x_prev = np.zeros(N)
-        self.z = np.zeros(N)
-        self.v = np.zeros(N)
         self.history = np.zeros((cfg.iters, N))
         self.x_hat_cache: list = [None] * K   # (x_hat, w_sum, round)
         self._w_rounds: dict[int, dict[int, float]] = {}
@@ -141,15 +134,16 @@ class MasterActor:
                 rt.transport.send(MASTER, edge_name(k), "collab",
                                   (rt.key.p2, rt.key.phi_p2, rt.key.g,
                                    cfg.gold_batch, cfg.kernel_backend))
+            Qk, mu, scale = self.edge_setups[k]
             rt.transport.send(MASTER, edge_name(k), "init",
-                              (self.AkTAk[k], cfg.rho),
-                              nbytes=self.AkTAk[k].nbytes)
+                              (Qk, mu, scale), nbytes=Qk.nbytes)
 
     def on_message(self, msg: Message) -> None:
         if msg.tag == "init_ok":
             k, Bk = msg.payload
-            self.Bbar_rowsums[k] = (Bk * self.rt.cfg.rho) @ np.ones(self.rt.nk)
-            self.alphas_real[k] = Bk @ (self.Ak[k].T @ self.ys)
+            scale = self.edge_setups[k][2]
+            self.C_rowsums[k] = (Bk * scale) @ np.ones(self.rt.nk)
+            self.u3s[k] = self.wl.share_vector(self.wst, k, Bk)
             self._n_init += 1
             if self._n_init == self.rt.cfg.K:
                 self._share()
@@ -170,7 +164,7 @@ class MasterActor:
         rt = self.rt
         rt.counter.phase = "share"
         for k in range(rt.cfg.K):
-            q_alpha = np.asarray(gamma1(self.alphas_real[k], rt.cfg.spec))
+            q_alpha = np.asarray(gamma1(self.u3s[k], rt.cfg.spec))
             rt.cq.submit("enc", (q_alpha,), partial(self._share_ready, k))
 
     def _share_ready(self, k: int, c_alpha) -> None:
@@ -189,11 +183,10 @@ class MasterActor:
         self.deadline_passed = False
         self.must_wait: set[int] = set()
         for k in range(cfg.K):
-            sl = slice(k * rt.nk, (k + 1) * rt.nk)
-            zk, vk = self.z[sl], self.v[sl]
-            self.w_cur[k] = float(np.sum(zk - vk))
-            qz = np.asarray(gamma2(zk, cfg.spec))
-            qv = np.asarray(gamma2(-vk, cfg.spec))
+            u1, u2 = self.wl.iter_inputs(self.wst, k)
+            self.w_cur[k] = float(np.sum(u1 + u2))
+            qz = np.asarray(gamma2(u1, cfg.spec))
+            qv = np.asarray(gamma2(u2, cfg.spec))
             rt.cq.submit("enc", (qz,), partial(self._enc_done, t, k, "z"))
             rt.cq.submit("enc", (qv,), partial(self._enc_done, t, k, "v"))
         self._w_rounds[t] = self.w_cur
@@ -270,17 +263,13 @@ class MasterActor:
         rt, cfg = self.rt, self.rt.cfg
         sl = slice(k * rt.nk, (k + 1) * rt.nk)
         self._x_new[sl] = np.asarray(dequantize_theorem1(
-            np.asarray(R).astype(np.float64), self.Bbar_rowsums[k],
+            np.asarray(R).astype(np.float64), self.C_rowsums[k],
             w_sum, rt.nk, cfg.spec))
         self._n_dec += 1
         if self._n_dec < cfg.K:
             return
         # master updates (10b)/(10c) with the (t-1) iterate — Jacobi order
-        z_new = np.asarray(admm_mod.soft_threshold(
-            jnp.asarray(self.v + self.x_prev), cfg.lam / cfg.rho))
-        self.v = self.v + self.x_prev - z_new
-        self.z = z_new
-        self.x_prev = self._x_new
+        self.wl.global_update(self.wst, self._x_new)
         self.history[self.t] = self._x_new
         self.iter_times.append(rt.sched.now)
         if self.t + 1 < cfg.iters:
@@ -307,8 +296,34 @@ class _Runtime:
         self.stale_limit = stale_limit
 
 
+def auto_hold_ticks(topo: Topology, transport: Transport, tick_s: float,
+                    cap: int = 64) -> int:
+    """Hold horizon from the observed link-latency spread (p95/p50).
+
+    Per-edge round-trip latency = 2x the summed per-hop ``latency_s`` on
+    the master<->edge route.  The hold covers the straggling tail's extra
+    round trip over the median — ``ceil((p95 − p50) / tick)`` — so a late
+    edge's ops get to share a launch with its peers (or with the next
+    iteration's chain) instead of flushing alone.  Homogeneous links give
+    spread 0, i.e. the flush-every-tick default.  Capped at ``cap`` so a
+    pathological outlier cannot park the queue indefinitely.
+    """
+    rtts = []
+    for k in range(topo.n_edges):
+        path = topo.route(MASTER, edge_name(k))
+        rtts.append(2.0 * sum(transport.link_for(u, v).latency_s
+                              for u, v in zip(path, path[1:])))
+    if len(rtts) < 2:
+        return 0
+    p50, p95 = np.percentile(rtts, (50, 95))
+    if p95 <= p50:
+        return 0
+    return int(min(cap, math.ceil((p95 - p50) / tick_s)))
+
+
 def run_on_runtime(A: np.ndarray, y: np.ndarray,
                    cfg: "protocol.ProtocolConfig", *,
+                   workload=None,
                    topology: Topology | None = None,
                    link: LinkModel | None = None,
                    per_link: dict | None = None,
@@ -318,7 +333,7 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
                    stale_limit: int = 4,
                    table: dict | None = None,
                    calib_path: str | None = None,
-                   coalesce_hold_ticks: int = 0,
+                   coalesce_hold_ticks: "int | str" = 0,
                    trace: bool = False) -> "protocol.ProtocolResult":
     """Run 3P-ADMM-PC2 on the simulated edge network; see module docstring.
 
@@ -326,11 +341,17 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     counters plus a ``"runtime"`` section (virtual clock, per-iteration
     completion times, per-link bytes, coalescing and dispatch telemetry).
 
+    ``workload`` selects the ADMM problem family (``repro.workloads``);
+    ``None`` resolves ``cfg.workload`` from the registry (default: the
+    paper's LASSO, bit-compatible with the historical loop).
+
     ``coalesce_hold_ticks > 0`` lets the crypto queue hold lone ops for up
     to that many ticks waiting for batch company — useful in deadline mode,
     where heterogeneous link delays otherwise strand late edges' ops in
     singleton launches (and a straggler's chain can merge with the next
-    iteration's ops).  0 (default) preserves flush-every-tick semantics.
+    iteration's ops).  0 (default) preserves flush-every-tick semantics;
+    ``"auto"`` derives the horizon from the link-latency spread
+    (:func:`auto_hold_ticks`) — pass an int to override the heuristic.
     """
     rng = random.Random(cfg.seed)
     M, N = A.shape
@@ -350,7 +371,8 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
             backends=("gold", "gold_batch", "vec"), path=calib_path,
             warm_key=key, warm_shapes=(nk, (1, nk, nk)))
         box = dispatch.AdaptiveBox(key, rng, table, counter=counter,
-                                   kernel_backend=cfg.kernel_backend)
+                                   kernel_backend=cfg.kernel_backend,
+                                   plain_bits=cfg.spec.plaintext_bits(nk))
     else:
         box, key = protocol.make_box(cfg, nk, rng, counter)
 
@@ -359,14 +381,17 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         raise ValueError(f"topology has {topo.n_edges} edges, cfg.K={K}")
     sched = Scheduler(seed=cfg.seed, trace=trace)
     transport = Transport(sched, topo, default=link, per_link=per_link)
+    if coalesce_hold_ticks == "auto":
+        coalesce_hold_ticks = auto_hold_ticks(topo, transport, tick_s)
     cq = CoalesceQueue(sched, box, counter=counter, tick_s=tick_s,
                        hold_ticks=coalesce_hold_ticks)
     cost = cost_model or dispatch.CostModel()
     rt = _Runtime(sched, transport, cq, box, key, counter, cfg, nk, mode,
                   cost, stale_limit)
 
+    wl = protocol.resolve_workload(cfg, workload)
     master = MasterActor(rt, np.asarray(A, np.float64),
-                         np.asarray(y, np.float64))
+                         np.asarray(y, np.float64), wl)
     transport.bind(MASTER, master.on_message)
     edge_actors = [EdgeActor(k, rt) for k in range(K)]
     for ea in edge_actors:
@@ -386,9 +411,11 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         "traffic_bytes": dict(transport.traffic),
         "key_bits": None if key is None else key.n.bit_length(),
         "cipher": cfg.cipher,
+        "workload": wl.name,
         "runtime": {
             "topology": topo.kind,
             "mode": mode,
+            "coalesce_hold_ticks": cq.hold_ticks,
             "virtual_time": sched.now,
             "iter_times": list(master.iter_times),
             "events": sched.events_run,
@@ -406,5 +433,5 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     if trace:
         stats["runtime"]["trace"] = list(sched.trace)
     return protocol.ProtocolResult(
-        x=master.x_prev, history=master.history, stats=stats,
+        x=master.wst.x_prev, history=master.history, stats=stats,
         stale_events=master.stale_events)

@@ -1,0 +1,56 @@
+"""repro.workloads — registry of ADMM problem families for the protocol.
+
+Every family is a :class:`~repro.workloads.base.Workload`; registering a
+class makes it reachable by name from ``ProtocolConfig.workload``,
+``repro.launch.edge_sim --workload``, ``benchmarks/bench_workloads.py``
+and ``examples/workload_zoo.py``.  See docs/workloads.md for the hook
+contract and how to add a family.
+
+>>> from repro import workloads
+>>> wl = workloads.get("ridge", rho=1.0, lam=0.1)
+>>> sorted(workloads.names())
+['elastic_net', 'lasso', 'logistic', 'power_grid', 'ridge']
+"""
+from __future__ import annotations
+
+from .base import (Workload, WorkloadInstance, WorkloadState,  # noqa: F401
+                   simulate_float)
+
+REGISTRY: dict[str, type[Workload]] = {}
+
+
+def register(cls: type[Workload]) -> type[Workload]:
+    """Class decorator: add a Workload subclass to the registry."""
+    if not cls.name or cls.name == "base":
+        raise ValueError(f"{cls.__name__} needs a unique .name")
+    REGISTRY[cls.name] = cls
+    return cls
+
+
+def get(name: str, **params) -> Workload:
+    """Instantiate the named workload (``params`` forward to __init__)."""
+    try:
+        cls = REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown workload {name!r}; registered: "
+                       f"{sorted(REGISTRY)}") from None
+    return cls(**params)
+
+
+def get_default(name: str) -> Workload:
+    """Instantiate the named workload with its class-recommended params
+    (``Workload.default_params``) — what registry-driven sweeps use."""
+    try:
+        cls = REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown workload {name!r}; registered: "
+                       f"{sorted(REGISTRY)}") from None
+    return cls(**cls.default_params)
+
+
+def names() -> list[str]:
+    return sorted(REGISTRY)
+
+
+# importing the family modules self-registers them
+from . import lasso, ridge, elastic_net, logistic, power_grid  # noqa: E402,F401

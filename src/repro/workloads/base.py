@@ -1,0 +1,257 @@
+"""Pluggable ADMM problem families for the 3P-ADMM-PC2 privacy protocol.
+
+The paper motivates the protocol with "multiple edge nodes use distributed
+data to train a global model", but the encrypted interaction pattern it
+builds (quantize -> collaboratively encrypt -> homomorphic matvec/aggregate
+-> decrypt-assist) is not LASSO-specific: per iteration the edge evaluates
+ONE affine map entirely in ciphertext,
+
+    x_k^{t+1} = u3_k + C_k (u1_k + u2_k),            (eq. 13 generalized)
+
+where ``C_k`` is a fixed per-edge matrix (held quantized by the edge),
+``u3_k`` a fixed vector (encrypted once in the data-security-sharing
+phase), and ``u1_k``/``u2_k`` two master-chosen vectors encrypted fresh
+every round.  Any problem family whose x-update can be written in that
+form runs through the protocol unchanged — same ciphertext stream
+structure, same Theorem-1 dequantization, same op/traffic accounting —
+under every cipher arm (scalar gold / batched gold / vec / adaptive).
+
+A :class:`Workload` names the pieces:
+
+  * ``make_instance``   — synthetic data generator for the family;
+  * ``edge_setup``      — the (Q_k, mu, scale) shipped to edge k, which
+    computes ``B_k = (Q_k + mu I)^{-1}`` and quantizes ``C_k = scale B_k``;
+  * ``share_vector``    — u3_k, encrypted once (Gamma_1);
+  * ``iter_inputs``     — (u1_k, u2_k) for the current round (Gamma_2);
+  * ``global_update``   — the master's Jacobi-ordered z/v/aux update;
+  * ``objective`` / ``metrics`` / ``reference_solution`` — evaluation;
+  * ``calibrate_spec``  — a :class:`QuantSpec` whose [zmin, zmax] range
+    provably covers every value the protocol will quantize, so Theorem-1
+    dequantization stays exact (see docs/workloads.md for the contract).
+
+``simulate_float`` runs the same iteration in plain float64 — the
+plaintext distributed baseline the benchmarks compare against, and the
+range-rehearsal the calibrator builds on.
+
+The default family (:mod:`repro.workloads.lasso`) is bit-compatible with
+the historical hard-coded loop in ``core/protocol.py``: identical
+quantization inputs in identical order, hence identical ciphertext
+streams (pinned by tests/test_conformance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from ..core.quantization import QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadInstance:
+    """One synthetic problem: design matrix, observations, ground truth."""
+    A: np.ndarray
+    y: np.ndarray
+    x_true: np.ndarray | None = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+class WorkloadState:
+    """Master-side iteration state: the Jacobi (x, z, v) triple plus any
+    workload auxiliaries (gradients, cached block matrices, ...)."""
+
+    def __init__(self, A: np.ndarray, y: np.ndarray, ys: np.ndarray, K: int):
+        self.A = A
+        self.y = y
+        self.ys = ys
+        self.K = K
+        self.Nk = A.shape[1] // K
+        N = A.shape[1]
+        self.x_prev = np.zeros(N)
+        self.z = np.zeros(N)
+        self.v = np.zeros(N)
+        self.aux: dict = {}
+
+    def sl(self, k: int) -> slice:
+        return slice(k * self.Nk, (k + 1) * self.Nk)
+
+
+class Workload:
+    """Base class: the quadratic consensus family (LASSO-shaped updates).
+
+    Subclasses override the hooks below; the base implementation is the
+    column-split quadratic loss  0.5 ||A_k x_k - ys||^2  with a workload
+    ``prox_z`` for the regularizer — which covers lasso / ridge /
+    elastic_net outright, while logistic re-targets ``edge_setup``,
+    ``share_vector`` and ``iter_inputs`` for its prox-linear step.
+    """
+
+    name = "base"
+    #: default quantization grid for ``calibrate_spec``.  Families whose
+    #: iteration feeds the decrypted iterate back through data-dependent
+    #: terms (logistic's gradient) amplify rounding error and override
+    #: this with a finer grid — the Remark-2 width check still gates it.
+    delta = 1e6
+    #: recommended constructor kwargs — what the registry-driven callers
+    #: (benchmarks/bench_workloads.py, examples/workload_zoo.py, the
+    #: property tests) build the family with, so a newly registered
+    #: workload works there without editing any hand-kept table.
+    default_params: dict = {}
+
+    def __init__(self, rho: float = 1.0, lam: float = 1.0, **params):
+        self.rho = float(rho)
+        self.lam = float(lam)
+        self.params = params
+
+    # -- data -------------------------------------------------------------
+    def make_instance(self, M: int, N: int, K: int,
+                      seed: int = 0, **kw) -> WorkloadInstance:
+        raise NotImplementedError
+
+    # -- state ------------------------------------------------------------
+    def init_state(self, A: np.ndarray, y: np.ndarray, ys: np.ndarray,
+                   K: int) -> WorkloadState:
+        return WorkloadState(np.asarray(A, np.float64),
+                             np.asarray(y, np.float64),
+                             np.asarray(ys, np.float64), K)
+
+    # -- initialization phase --------------------------------------------
+    def edge_setup(self, st: WorkloadState, k: int
+                   ) -> tuple[np.ndarray, float, float]:
+        """(Q_k, mu, scale): edge computes B_k = (Q_k + mu I)^{-1} and
+        keeps Gamma_2(scale * B_k)."""
+        Ak = st.A[:, st.sl(k)]
+        return Ak.T @ Ak, self.rho, self.rho
+
+    def share_vector(self, st: WorkloadState, k: int,
+                     Bk: np.ndarray) -> np.ndarray:
+        """u3_k — encrypted once in the data-security-sharing phase."""
+        Ak = st.A[:, st.sl(k)]
+        return Bk @ (Ak.T @ st.ys)
+
+    # -- parallel privacy-computing phase --------------------------------
+    def iter_inputs(self, st: WorkloadState, k: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """(u1_k, u2_k) for this round — both Gamma_2-quantized+encrypted."""
+        sl = st.sl(k)
+        return st.z[sl], -st.v[sl]
+
+    def global_update(self, st: WorkloadState, x_new: np.ndarray) -> None:
+        """Master's (10b)/(10c) with the (t-1) iterate — Jacobi order."""
+        z_new = np.asarray(self.prox_z(st.v + st.x_prev))
+        st.v = st.v + st.x_prev - z_new
+        st.z = z_new
+        st.x_prev = x_new
+
+    def prox_z(self, u: np.ndarray) -> np.ndarray:
+        """prox_{r/rho} of the regularizer — the z-update."""
+        raise NotImplementedError
+
+    # -- evaluation -------------------------------------------------------
+    def objective(self, A: np.ndarray, y: np.ndarray,
+                  x: np.ndarray) -> float:
+        raise NotImplementedError
+
+    def reference_solution(self, A: np.ndarray, y: np.ndarray,
+                           K: int) -> np.ndarray:
+        """What the distributed iteration converges to (closed form or a
+        trusted independent solver) — the convergence-test oracle."""
+        raise NotImplementedError
+
+    def metrics(self, inst: WorkloadInstance, x: np.ndarray) -> dict:
+        out = {"objective": self.objective(inst.A, inst.y, x)}
+        if inst.x_true is not None:
+            out["mse_vs_truth"] = float(np.mean((x - inst.x_true) ** 2))
+        return out
+
+    # -- quantization-range calibration ----------------------------------
+    def calibrate_spec(self, A: np.ndarray, y: np.ndarray, K: int,
+                       iters: int, delta: float | None = None,
+                       margin: float = 2.0,
+                       y_scale: str = "consistent") -> QuantSpec:
+        """Pick a symmetric [−zmax, zmax] covering every quantized value.
+
+        Rehearses the iteration in plain float64 (``simulate_float``)
+        tracking the max magnitude over all Gamma inputs — C_k entries,
+        u3_k, and every round's (u1_k, u2_k) — then pads by ``margin``
+        and rounds zmax up to a power of two (deterministic, so all
+        cipher arms derive the same spec).  In-range inputs are exactly
+        what Theorem 1 needs for the dequantization to be exact up to
+        quantization rounding.
+        """
+        _, _, vmax = simulate_float(self, A, y, K, iters,
+                                    y_scale=y_scale, track_range=True)
+        zmax = float(2.0 ** math.ceil(math.log2(max(margin * vmax, 1.0))))
+        return QuantSpec(delta=self.delta if delta is None else delta,
+                         zmin=-zmax, zmax=zmax)
+
+
+# ---------------------------------------------------------------------------
+# Plaintext distributed baseline (and range rehearsal)
+# ---------------------------------------------------------------------------
+
+def simulate_float(wl: Workload, A: np.ndarray, y: np.ndarray, K: int,
+                   iters: int, y_scale: str = "consistent",
+                   track_range: bool = False):
+    """The workload's distributed iteration in plain float64 — no
+    quantization, no encryption.  Returns ``(x, history)`` or, with
+    ``track_range=True``, ``(x, history, vmax)`` where ``vmax`` is the
+    largest magnitude that entered any Gamma quantizer slot."""
+    A = np.asarray(A, np.float64)
+    y = np.asarray(y, np.float64)
+    M, N = A.shape
+    assert N % K == 0, "pad N to a multiple of K"
+    Nk = N // K
+    ys = y / K if y_scale == "consistent" else y
+    st = wl.init_state(A, y, ys, K)
+    vmax = 0.0
+    Cs, u3s = [], []
+    for k in range(K):
+        Q, mu, scale = wl.edge_setup(st, k)
+        Bk = np.linalg.inv(Q + mu * np.eye(Nk))
+        C = scale * Bk
+        u3 = wl.share_vector(st, k, Bk)
+        Cs.append(C)
+        u3s.append(u3)
+        if track_range:
+            vmax = max(vmax, float(np.max(np.abs(C))),
+                       float(np.max(np.abs(u3))) if u3.size else 0.0)
+    history = np.zeros((iters, N))
+    for t in range(iters):
+        x_new = np.zeros(N)
+        for k in range(K):
+            sl = st.sl(k)
+            u1, u2 = wl.iter_inputs(st, k)
+            if track_range:
+                vmax = max(vmax, float(np.max(np.abs(u1))),
+                           float(np.max(np.abs(u2))))
+            x_new[sl] = u3s[k] + Cs[k] @ (u1 + u2)
+        wl.global_update(st, x_new)
+        history[t] = x_new
+    if track_range:
+        # the decrypted iterate feeds the next round's inputs; cover it too
+        vmax = max(vmax, float(np.max(np.abs(history))) if iters else 0.0)
+        return st.x_prev, history, vmax
+    return st.x_prev, history
+
+
+# ---------------------------------------------------------------------------
+# Shared numeric helpers for the concrete families
+# ---------------------------------------------------------------------------
+
+def soft_threshold_np(x: np.ndarray, t: float) -> np.ndarray:
+    return np.sign(x) * np.maximum(np.abs(x) - t, 0.0)
+
+
+def ista_block(Ak: np.ndarray, ys: np.ndarray, l1: float, l2: float,
+               iters: int = 4000) -> np.ndarray:
+    """Proximal gradient for  0.5||A_k x − ys||² + l1‖x‖₁ + l2/2‖x‖² —
+    the per-block fixed point of the quadratic consensus family."""
+    L = float(np.linalg.norm(Ak, 2) ** 2) + l2
+    step = 1.0 / max(L, 1e-12)
+    x = np.zeros(Ak.shape[1])
+    for _ in range(iters):
+        g = Ak.T @ (Ak @ x - ys) + l2 * x
+        x = soft_threshold_np(x - step * g, l1 * step)
+    return x

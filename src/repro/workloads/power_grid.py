@@ -1,0 +1,73 @@
+"""Power-network reconstruction (paper §V-C) as a first-class workload.
+
+Promotes the one-off ``examples/power_grid_reconstruction.py`` /
+``benchmarks/bench_power_grid.py`` setup into the registry: per-bus LASSO
+on the Kirchhoff observations S_i = Phi_i d_i (eq. 50), where the
+recovered admittance vector's support is scored against the true
+adjacency row (AUROC/AUPRC — the paper's Fig. 10 metric).  The ADMM
+machinery is LASSO's; only data generation and metrics differ.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..data import synthetic
+from . import register
+from .base import WorkloadInstance
+from .lasso import LassoWorkload
+
+
+@register
+class PowerGridWorkload(LassoWorkload):
+    name = "power_grid"
+    default_params = {"rho": 1.0, "lam": 0.1}
+
+    def make_instance(self, M: int, N: int, K: int,
+                      seed: int = 0, **kw) -> WorkloadInstance:
+        """N buses, M voltage/current observation rows; the per-bus LASSO
+        instance of ``bus`` (default 0), columns truncated to a multiple
+        of K exactly as the Fig.-10 bench does."""
+        bus = int(kw.pop("bus", 0))
+        net = synthetic.make_power_network(
+            N, avg_degree=kw.pop("avg_degree", 3.0), T=M, seed=seed)
+        inst = synthetic.bus_lasso(net, bus)
+        Npad = N - (N % K)
+        truth = net.adjacency[bus][:Npad].astype(bool)
+        mask = np.ones(Npad, bool)
+        mask[bus if bus < Npad else 0] = False     # exclude the self column
+        return WorkloadInstance(
+            A=inst.A[:, :Npad], y=inst.y, x_true=inst.x_true[:Npad],
+            meta={"bus": bus, "adjacency": truth, "mask": mask})
+
+    def metrics(self, inst: WorkloadInstance, x: np.ndarray) -> dict:
+        out = super().metrics(inst, x)
+        mask = inst.meta.get("mask")
+        truth = inst.meta.get("adjacency")
+        if mask is not None and truth is not None:
+            out["auroc"] = _auroc(truth[mask], np.abs(x)[mask])
+        return out
+
+
+def _auroc(y_true: np.ndarray, score: np.ndarray) -> float:
+    """Rank-based AUROC (mirrors benchmarks/common.py, which src/ must not
+    import)."""
+    y = np.asarray(y_true).astype(bool).ravel()
+    s = np.asarray(score).ravel()
+    n_pos = int(y.sum())
+    n_neg = y.size - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    order = np.argsort(s, kind="mergesort")
+    ranks = np.empty(y.size, dtype=np.float64)
+    ranks[order] = np.arange(1, y.size + 1)
+    s_sorted = s[order]
+    i = 0
+    while i < y.size:                       # average ranks over ties
+        j = i
+        while j + 1 < y.size and s_sorted[j + 1] == s_sorted[i]:
+            j += 1
+        if j > i:
+            ranks[order[i:j + 1]] = (i + j) / 2.0 + 1.0
+        i = j + 1
+    return float((ranks[y].sum() - n_pos * (n_pos + 1) / 2.0)
+                 / (n_pos * n_neg))

@@ -2,6 +2,8 @@
 
 Runs the full 3P-ADMM-PC2 protocol (K=4, small keys) under every box arm —
 scalar gold, batched limb-resident gold, vec, and adaptive dispatch — and
+for every conformance workload (the paper's LASSO plus, since the
+``repro.workloads`` refactor, ridge and logistic consensus training), and
 asserts the three invariants the next refactor hides behind:
 
 * **bit-identical ciphertext streams**: every ciphertext any arm emits
@@ -9,19 +11,25 @@ asserts the three invariants the next refactor hides behind:
 * **identical rng consumption**: after the run, each arm's
   ``random.Random`` stream sits at the same state, so arms stay
   interchangeable mid-protocol;
-* **matching MSE trajectories**: the per-iteration history (and hence the
-  MSE-vs-truth curve) is array-equal across all arms including ``plain``.
+* **matching trajectories**: the per-iteration history (and hence the
+  MSE/objective curve) is array-equal across all arms incl. ``plain``.
+
+The LASSO case additionally pins BIT-COMPATIBILITY of the generic
+workload loop with the historical hard-coded protocol (fixed legacy
+QuantSpec, same instance); ridge/logistic use their calibrated ranges.
 
 Also the acceptance proof for the Algorithm-3 batched edges: with
 ``gold_batch=True`` the collaborative encryption half and the p^2
 decryption assist run on the limb kernels — never the scalar ``pow``/``%``
 loops — and return bit-identical values.
 """
+import dataclasses
 import random
 
 import numpy as np
 import pytest
 
+from repro import workloads
 from repro.core import cipher_tensor as ctm
 from repro.core import paillier as gold
 from repro.core import paillier_batch as pb
@@ -35,6 +43,7 @@ from repro.runtime.runner import run_on_runtime
 
 SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
 K, N, ITERS, KEY_BITS = 4, 32, 3, 128   # Nk = 8 == pb.BATCH_MIN
+WORKLOADS = ("lasso", "ridge", "logistic")
 
 
 def _as_ints(c) -> list[int]:
@@ -79,9 +88,26 @@ def inst():
     return make_lasso(24, N, sparsity=0.1, noise=0.01, seed=1)
 
 
-@pytest.fixture(scope="module")
-def runs(inst):
-    """All arms, each with a recorded ciphertext stream and its box."""
+def _workload_case(name, lasso_inst):
+    """(instance, spec, cfg overrides) for one conformance workload.
+    LASSO keeps the historical instance + fixed legacy spec (the
+    bit-compat pin); ridge/logistic get workload data + calibrated
+    ranges.  The cfg runs with the SAME (rho, lam) the calibration
+    rehearsed — a mismatch would void the in-range guarantee."""
+    if name == "lasso":
+        return lasso_inst, SPEC, {}
+    wl = workloads.get_default(name)
+    winst = wl.make_instance(24, N, K, seed=1)
+    spec = wl.calibrate_spec(winst.A, winst.y, K, ITERS)
+    return winst, spec, {"rho": wl.rho, "lam": wl.lam}
+
+
+@pytest.fixture(scope="module", params=WORKLOADS)
+def runs(request, inst):
+    """All arms of one workload, each with a recorded ciphertext stream
+    and its box."""
+    wname = request.param
+    winst, spec, cfg_over = _workload_case(wname, inst)
     mp = pytest.MonkeyPatch()
     recorders: dict[str, RecordingBox] = {}
     real_make_box = protocol.make_box
@@ -116,7 +142,9 @@ def runs(inst):
                 ("vec", _cfg(cipher="vec")),
         ):
             current["arm"] = arm
-            out[arm] = protocol.run_protocol(inst.A, inst.y, cfg)
+            cfg = dataclasses.replace(cfg, workload=wname, spec=spec,
+                                      **cfg_over)
+            out[arm] = protocol.run_protocol(winst.A, winst.y, cfg)
         # adaptive runs on the runtime (that is where AdaptiveBox lives);
         # the synthetic table routes enc/dec to gold and add/matvec to
         # vec, which exercises the cross-representation coercions
@@ -128,35 +156,43 @@ def runs(inst):
                                   "matvec": 1e-6, "convert": 1e-8},
         }}
         out["adaptive"] = run_on_runtime(
-            inst.A, inst.y, _cfg(cipher="auto"), table=table)
+            winst.A, winst.y,
+            _cfg(cipher="auto", workload=wname, spec=spec, **cfg_over),
+            table=table)
     finally:
         mp.undo()
-    return {"results": out, "recorders": recorders}
+    return {"results": out, "recorders": recorders, "inst": winst,
+            "workload": wname}
 
 
 ENCRYPTED_ARMS = ("gold_scalar", "gold_batch", "vec", "adaptive")
 
 
-def test_mse_trajectories_match_across_all_arms(runs, inst):
+def test_trajectories_match_across_all_arms(runs):
     """Paillier homomorphism is exact below n: every arm's per-iteration
-    history — and hence its MSE curve — equals the plain integer chain."""
+    history — and hence its MSE/objective curve — equals the plain
+    integer chain, for every conformance workload."""
     res = runs["results"]
+    x_true = runs["inst"].x_true
     for arm in ENCRYPTED_ARMS:
-        assert np.array_equal(res["plain"].history, res[arm].history), arm
-    mse_ref = np.mean((res["plain"].history - inst.x_true) ** 2, axis=1)
+        assert np.array_equal(res["plain"].history, res[arm].history), \
+            (runs["workload"], arm)
+    mse_ref = np.mean((res["plain"].history - x_true) ** 2, axis=1)
     for arm in ENCRYPTED_ARMS:
-        mse = np.mean((res[arm].history - inst.x_true) ** 2, axis=1)
-        assert np.array_equal(mse_ref, mse), arm
+        mse = np.mean((res[arm].history - x_true) ** 2, axis=1)
+        assert np.array_equal(mse_ref, mse), (runs["workload"], arm)
 
 
 def test_ciphertext_streams_bit_identical(runs):
     """Same key, same rng stream, same values: the full ordered ciphertext
-    stream is bit-identical whichever arm produced it."""
+    stream is bit-identical whichever arm produced it — the encrypted
+    interaction pattern (share u3, then u1/u2 per round) is
+    workload-generic, so this holds for every family."""
     recs = runs["recorders"]
     ref = recs["gold_scalar"].enc_stream
-    assert len(ref) == K * (N // K) * (1 + 2 * ITERS)   # share + z,v per iter
+    assert len(ref) == K * (N // K) * (1 + 2 * ITERS)   # share + u1,u2/iter
     for arm in ("gold_batch", "vec", "adaptive"):
-        assert recs[arm].enc_stream == ref, arm
+        assert recs[arm].enc_stream == ref, (runs["workload"], arm)
 
 
 def test_rng_consumption_identical(runs):

@@ -64,6 +64,64 @@ def test_calibrate_writes_and_reuses_cache(tmp_path, monkeypatch):
     assert sorted(calls) == ["gold", "plain"]
 
 
+def test_compile_cache_enable_and_opt_out(tmp_path, monkeypatch):
+    """ROADMAP follow-up: the persistent XLA compile cache points at a
+    ``~/.cache/repro`` directory (so warmup amortizes across PROCESSES),
+    is idempotent, honors the env overrides, and can be opted out."""
+    import jax
+    from repro.kernels import compile_cache
+    prev = jax.config.jax_compilation_cache_dir
+    prev_state = dict(compile_cache._state)
+    try:
+        # simulate a fresh process: nothing configured yet
+        compile_cache._state["enabled"] = None
+        jax.config.update("jax_compilation_cache_dir", None)
+        d = str(tmp_path / "jx")
+        monkeypatch.setenv(compile_cache.ENV_DIR, d)
+        monkeypatch.delenv(compile_cache.ENV_OFF, raising=False)
+        assert compile_cache.enable() == d
+        assert jax.config.jax_compilation_cache_dir == d
+        assert compile_cache.enable() == d          # idempotent re-enable
+        # a HOST-configured dir (set by someone else while we think we
+        # configured nothing) is respected, not overwritten
+        host = str(tmp_path / "host")
+        jax.config.update("jax_compilation_cache_dir", host)
+        compile_cache._state["enabled"] = None
+        assert compile_cache.enable() == host
+        assert jax.config.jax_compilation_cache_dir == host
+        # opt-out: no reconfiguration happens
+        compile_cache._state["enabled"] = None
+        monkeypatch.setenv(compile_cache.ENV_OFF, "1")
+        assert compile_cache.enable() is None
+    finally:
+        compile_cache._state.update(prev_state)
+        jax.config.update("jax_compilation_cache_dir", prev)
+
+
+def test_warmup_enables_compile_cache(tmp_path, monkeypatch):
+    """paillier_batch.warmup switches the persistent cache on, so every
+    warmed entry point (dispatch.calibrate's warm_key hook, the benches)
+    persists its compiles."""
+    import jax
+    from repro.core import paillier_batch as pb
+    from repro.kernels import compile_cache
+    prev = jax.config.jax_compilation_cache_dir
+    prev_state = dict(compile_cache._state)
+    try:
+        compile_cache._state["enabled"] = None
+        jax.config.update("jax_compilation_cache_dir", None)
+        d = str(tmp_path / "jx2")
+        monkeypatch.setenv(compile_cache.ENV_DIR, d)
+        monkeypatch.delenv(compile_cache.ENV_OFF, raising=False)
+        key = gold.keygen(128, random.Random(3))
+        w = pb.warmup(pb.make_batch_key(key), (8,))
+        assert w["calls"] == 3
+        assert jax.config.jax_compilation_cache_dir == d
+    finally:
+        compile_cache._state.update(prev_state)
+        jax.config.update("jax_compilation_cache_dir", prev)
+
+
 def test_lookup_nearest_entry():
     t = _table(batch=16)
     assert dispatch.lookup(t, "gold", 128, 999) \

@@ -123,6 +123,26 @@ def test_sync_vec_coalesced_bit_exact_hierarchical(inst):
     assert link_total == 2 * logical
 
 
+def test_sync_workload_runtime_matches_protocol():
+    """The workload-generic runtime IS the workload-generic protocol:
+    a non-LASSO family (logistic) over a relayed topology reproduces the
+    synchronous reference bit-for-bit, ops and traffic included."""
+    from repro import workloads
+    wl = workloads.get("logistic", rho=1.0, lam=0.1)
+    winst = wl.make_instance(24, 24, 4, seed=2)
+    spec = wl.calibrate_spec(winst.A, winst.y, 4, 5)
+    cfg = protocol.ProtocolConfig(K=4, rho=1.0, lam=0.1, iters=5,
+                                  spec=spec, cipher="plain", seed=0,
+                                  workload="logistic")
+    ref = protocol.run_protocol(winst.A, winst.y, cfg)
+    rt = run_on_runtime(winst.A, winst.y, cfg,
+                        topology=topology.hierarchical(4, fanout=2))
+    assert np.array_equal(ref.history, rt.history)
+    assert ref.stats["traffic_bytes"] == rt.stats["traffic_bytes"]
+    assert ref.stats["ops"] == rt.stats["ops"]
+    assert rt.stats["workload"] == "logistic"
+
+
 def test_hierarchical_virtual_clock_slower_than_star(inst):
     cfg = _cfg(iters=4)
     t_star = run_on_runtime(inst.A, inst.y, cfg) \
@@ -228,10 +248,44 @@ def test_deadline_hold_coalesces_straggler_ops_across_iterations(inst):
         assert float(np.max(np.abs(r.x - sync.x))) < 0.5
 
 
+def test_auto_hold_ticks_beats_fixed_zero_on_straggler(inst):
+    """ROADMAP follow-up: ``coalesce_hold_ticks="auto"`` derives the hold
+    horizon from the link-latency spread (p95 − p50 of per-edge round
+    trips, in ticks) and beats hold=0 on the straggler scenario's launch
+    count; a fixed int stays available as the override."""
+    cfg = protocol.ProtocolConfig(
+        K=2, lam=0.05, iters=10, spec=SPEC, cipher="plain", seed=0,
+        deadline=0.02, latency_fn=lambda k, t: 0.0)
+    per_link = {("master", "edge1"): LinkModel(latency_s=15e-3)}
+    runs = {hold: run_on_runtime(inst.A, inst.y, cfg, per_link=per_link,
+                                 coalesce_hold_ticks=hold, tick_s=1e-3)
+            for hold in (0, "auto", 16)}
+    auto_rt = runs["auto"].stats["runtime"]
+    assert auto_rt["coalesce_hold_ticks"] > 0       # spread detected
+    assert auto_rt["held_flushes"] > 0
+    assert auto_rt["launches"] < runs[0].stats["runtime"]["launches"]
+    # the fixed knob overrides the heuristic verbatim
+    assert runs[16].stats["runtime"]["coalesce_hold_ticks"] == 16
+    # holding reorders launches, never values: still a valid trajectory
+    sync = run_on_runtime(inst.A, inst.y, protocol.ProtocolConfig(
+        K=2, lam=0.05, iters=10, spec=SPEC, cipher="plain", seed=0))
+    assert float(np.max(np.abs(runs["auto"].x - sync.x))) < 0.5
+
+
+def test_auto_hold_ticks_zero_on_homogeneous_links(inst):
+    """Uniform links => zero latency spread => the heuristic keeps the
+    flush-every-tick default (no held flushes in a sync run)."""
+    r = run_on_runtime(inst.A, inst.y, _cfg(iters=3),
+                       coalesce_hold_ticks="auto")
+    assert r.stats["runtime"]["coalesce_hold_ticks"] == 0
+    assert r.stats["runtime"]["held_flushes"] == 0
+
+
 def test_sync_mode_defaults_keep_flush_every_tick(inst):
     """hold_ticks defaults to 0: unchanged semantics for existing runs."""
     r = run_on_runtime(inst.A, inst.y, _cfg(iters=3))
     assert r.stats["runtime"]["held_flushes"] == 0
+    assert r.stats["runtime"]["coalesce_hold_ticks"] == 0
 
 
 def test_run_protocol_delegates_deadline_to_runtime(inst):

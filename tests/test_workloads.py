@@ -1,0 +1,195 @@
+"""Workload subsystem: registry, convergence oracles, quantization-range
+calibration, protocol integration, and the wide VecBox decrypt path the
+big-Delta regimes need."""
+import random
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro import workloads
+from repro.core import paillier as gold
+from repro.core import paillier_batch as pb
+from repro.core import protocol
+from repro.core.quantization import QuantSpec
+from repro.workloads.base import simulate_float
+
+settings.register_profile("ci", max_examples=5, deadline=None)
+settings.load_profile("ci")
+
+NAMES = sorted(workloads.names())
+# iterations until the distributed fixed point is reached to ~1e-6; a
+# newly registered family gets the conservative default
+CONV_ITERS = {"lasso": 600, "ridge": 400, "elastic_net": 600,
+              "logistic": 3000, "power_grid": 800}
+
+
+def _wl(name):
+    return workloads.get_default(name)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert set(workloads.names()) >= {"lasso", "ridge", "elastic_net",
+                                      "logistic", "power_grid"}
+    with pytest.raises(KeyError, match="unknown workload"):
+        workloads.get("svm")
+
+
+def test_registry_params_forward():
+    wl = workloads.get("elastic_net", rho=2.0, lam=0.3, l2=0.7)
+    assert (wl.rho, wl.lam, wl.l2) == (2.0, 0.3, 0.7)
+
+
+# ---------------------------------------------------------------------------
+# convergence: distributed iteration lands on each family's oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", NAMES)
+def test_float_iteration_converges_to_reference(name):
+    """The plaintext distributed iteration reaches the family's oracle:
+    ridge's exact blockwise solve, lasso/elastic_net's per-block proximal
+    solutions, logistic's CENTRALIZED full-batch-GD optimum (the fixed
+    point of the prox-linear consensus scheme is the true regularized
+    optimum), power_grid's per-bus lasso."""
+    wl = _wl(name)
+    inst = wl.make_instance(36, 24, 4, seed=2)
+    x, _ = simulate_float(wl, inst.A, inst.y, 4,
+                           CONV_ITERS.get(name, 3000))
+    ref = wl.reference_solution(inst.A, inst.y, 4)
+    assert float(np.max(np.abs(x - ref))) < 1e-5, name
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_protocol_tracks_float_baseline(name):
+    """The quantized protocol (calibrated range) stays within quantization
+    error of the plaintext distributed baseline for every family."""
+    wl = _wl(name)
+    inst = wl.make_instance(36, 24, 4, seed=2)
+    iters = 25
+    spec = wl.calibrate_spec(inst.A, inst.y, 4, iters)
+    xf, hf = simulate_float(wl, inst.A, inst.y, 4, iters)
+    cfg = protocol.ProtocolConfig(K=4, rho=wl.rho, lam=wl.lam, iters=iters,
+                                  spec=spec, cipher="plain", seed=0,
+                                  workload=name)
+    r = protocol.run_protocol(inst.A, inst.y, cfg, workload=wl)
+    assert float(np.max(np.abs(r.history - hf))) < 1e-2, name
+    assert float(np.max(np.abs(r.x - xf))) < 1e-2, name
+    assert r.stats["workload"] == name
+
+
+def test_ridge_closed_form_is_exact():
+    """The ridge oracle is algebraically exact: plugging it into the
+    fixed-point equations leaves zero residual."""
+    wl = _wl("ridge")
+    inst = wl.make_instance(30, 20, 4, seed=5)
+    x = wl.reference_solution(inst.A, inst.y, 4)
+    ys = inst.y / 4
+    for k in range(4):
+        sl = slice(k * 5, (k + 1) * 5)
+        Ak = inst.A[:, sl]
+        res = (Ak.T @ Ak + wl.lam * np.eye(5)) @ x[sl] - Ak.T @ ys
+        assert float(np.max(np.abs(res))) < 1e-12
+
+
+def test_logistic_reaches_centralized_optimum():
+    """The distributed private iteration minimizes the SAME objective as
+    centralized regularized logistic regression (gradient at the limit
+    point vanishes)."""
+    wl = _wl("logistic")
+    inst = wl.make_instance(60, 16, 4, seed=3)
+    x, _ = simulate_float(wl, inst.A, inst.y, 4, 4000)
+    m = wl.metrics(inst, x)
+    assert m["grad_norm"] < 1e-6
+    ref = wl.reference_solution(inst.A, inst.y, 4)
+    assert abs(wl.objective(inst.A, inst.y, x)
+               - wl.objective(inst.A, inst.y, ref)) < 1e-9
+
+
+def test_power_grid_recovers_topology():
+    wl = _wl("power_grid")
+    inst = wl.make_instance(160, 34, 4, seed=0)
+    assert inst.A.shape[1] % 4 == 0
+    x, _ = simulate_float(wl, inst.A, inst.y, 4, 200)
+    assert wl.metrics(inst, x)["auroc"] > 0.8
+
+
+# ---------------------------------------------------------------------------
+# bit-compatibility: the generic loop IS the historical LASSO loop
+# ---------------------------------------------------------------------------
+
+def test_default_workload_is_lasso_and_explicit_object_matches():
+    wl = _wl("lasso")
+    inst = wl.make_instance(24, 24, 3, seed=1)
+    spec = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+    cfg = protocol.ProtocolConfig(K=3, lam=0.05, iters=6, spec=spec,
+                                  cipher="gold", key_bits=128, seed=0)
+    assert cfg.workload == "lasso"
+    by_name = protocol.run_protocol(inst.A, inst.y, cfg)
+    by_obj = protocol.run_protocol(inst.A, inst.y, cfg, workload=wl)
+    assert np.array_equal(by_name.history, by_obj.history)
+
+
+# ---------------------------------------------------------------------------
+# calibration contract (property-tested under the hypothesis shim)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.sampled_from(NAMES))
+def test_calibrated_range_keeps_chain_exact(seed, name):
+    """For random instances, the calibrated [zmin, zmax] covers every
+    value the protocol quantizes: the quantized run never clips (all
+    Gamma_2 inputs in range <=> quantized values within [0, Delta]) and
+    therefore tracks the float baseline at quantization error."""
+    wl = _wl(name)
+    inst = wl.make_instance(18, 12, 3, seed=seed)
+    iters = 8
+    spec = wl.calibrate_spec(inst.A, inst.y, 3, iters)
+    _, _, vmax = simulate_float(wl, inst.A, inst.y, 3, iters,
+                                track_range=True)
+    assert spec.zmax >= vmax and spec.zmin <= -vmax
+    xf, _ = simulate_float(wl, inst.A, inst.y, 3, iters)
+    r = protocol.run_protocol(
+        inst.A, inst.y,
+        protocol.ProtocolConfig(K=3, rho=wl.rho, lam=wl.lam, iters=iters,
+                                spec=spec, cipher="plain", seed=0),
+        workload=wl)
+    assert float(np.max(np.abs(r.x - xf))) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# wide VecBox decrypt (ROADMAP PR-3 follow-up): plaintexts > 63 bits
+# ---------------------------------------------------------------------------
+
+def test_vecbox_decrypt_exact_above_63_bits():
+    """Theorem-1 chains above int64 decrypt exactly: the plaintext limbs
+    decode through the bulk bigint codec instead of wrapping through
+    limbs_to_int64.  Also exercises the CipherTensor input route."""
+    key = gold.keygen(256, random.Random(0))
+    box = protocol.VecBox(key, random.Random(1))
+    ms = [2 ** 80 + 12345, 2 ** 64, 2 ** 63 - 1, 0, 7] + [3] * 4
+    cts = pb.enc_ct(pb.make_batch_key(key), ms, random.Random(2))
+    out = box.decrypt(cts)                      # CipherTensor in
+    assert [int(v) for v in out] == ms
+    out2 = box.decrypt(cts.limbs)               # raw limb array in
+    assert [int(v) for v in out2] == ms
+
+
+def test_vec_protocol_big_delta_matches_plain():
+    """End-to-end regression at a quantization grid whose integer chain
+    exceeds int64 (2*N*Delta^2 > 2^63): the vec arm used to wrap
+    silently; with the wide return path it equals the plain chain
+    bit-for-bit."""
+    wl = _wl("lasso")
+    inst = wl.make_instance(16, 16, 2, seed=4)
+    spec = QuantSpec(delta=2e9, zmin=-8.0, zmax=8.0)
+    assert not spec.int64_safe(8)               # chain needs > 62 bits
+    kw = dict(K=2, lam=0.05, iters=3, spec=spec, seed=0, key_bits=160)
+    plain = protocol.run_protocol(inst.A, inst.y,
+                                  protocol.ProtocolConfig(cipher="plain",
+                                                          **kw))
+    vec = protocol.run_protocol(inst.A, inst.y,
+                                protocol.ProtocolConfig(cipher="vec", **kw))
+    assert np.array_equal(plain.history, vec.history)
