@@ -2,7 +2,11 @@
 
 Beyond-paper: the abstract's "multiple edge nodes use distributed data to
 train a global model" generalized over ``repro.workloads`` (lasso / ridge
-/ elastic_net / logistic / power_grid).  Two sections:
+/ elastic_net / logistic / power_grid, the row-split consensus families
+consensus_lasso / consensus_logistic — each edge holds its OWN rows, the
+z-update aggregate crosses through secure aggregation — and
+streaming_lasso, whose time-varying y re-runs the encrypted share phase
+mid-run; ``reshare_events`` in each row counts those).  Two sections:
 
 * **accuracy** — workloads x K in {4, 16, 64}: the quantized protocol
   (plain cipher — the bit-exact functional simulation, so K=64 stays
@@ -88,12 +92,14 @@ def _accuracy_sweep(rows, name, wl, edge_counts, m, n, iters):
         obj_f = wl.objective(inst.A, inst.y, xf)
         entry = {
             "workload": name, "edges": K,
+            "split": wl.split,
             "mse_vs_float_baseline": mse,
             "objective_protocol": obj_q,
             "objective_float_baseline": obj_f,
             "objective_rel_gap": abs(obj_q - obj_f) / max(abs(obj_f), 1e-12),
             "quant_range": [spec.zmin, spec.zmax],
             "within_tol": bool(mse < TOL_MSE),
+            "reshare_events": r.stats.get("reshare_events", 0),
             "metrics": wl.metrics(inst, r.x),
         }
         out.append(entry)

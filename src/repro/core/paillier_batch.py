@@ -320,7 +320,11 @@ def matvec_many(bk: BatchKey, Ks, cs_list: Sequence,
     key, vk = bk.key, bk.vk
     Ks = np.asarray(Ks, dtype=object)
     B, M, N = Ks.shape
-    ct_in = B > 0 and all(isinstance(c, CipherTensor) for c in cs_list)
+    if len(cs_list) != B:
+        raise ValueError(f"{len(cs_list)} ciphertext vectors for B={B}")
+    if B == 0:
+        return []          # empty fan-in: nothing to launch
+    ct_in = all(isinstance(c, CipherTensor) for c in cs_list)
     for b, row in enumerate(cs_list):
         if len(row) != N:
             raise ValueError(f"ciphertext vector {b} has {len(row)} != {N}")

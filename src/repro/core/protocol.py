@@ -17,8 +17,14 @@ vectors/matrices fill the (u1, u2, u3, C) slots of the affine ciphertext
 map is the problem family's business — LASSO (the paper's problem,
 bit-compatible with the historical hard-coded loop: u1 = z_k, u2 = -v_k,
 C = rho B_k), ridge, elastic_net, logistic consensus training,
-power_grid.  The encrypted interaction pattern, accounting and
-collaborative (Algorithm-3) machinery are identical for all of them.
+power_grid, the row-split consensus families (each edge's block is the
+full model width and the master's state stacks K copies — the
+``Workload.dims`` split-axis contract) and streaming families (the
+``Workload.reshare`` hook re-runs the data-security-sharing phase for
+the edges whose u3 changed mid-run).  The loop is generic over WHAT is
+encrypted and over WHEN data enters it; the encrypted interaction
+pattern, accounting and collaborative (Algorithm-3) machinery are
+identical for all of them.
 
 Cipher backends share one interface so the protocol logic is written once:
 
@@ -481,10 +487,11 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
 
     wl = resolve_workload(cfg, workload)
     rng = random.Random(cfg.seed)
-    M, N = A.shape
     K = cfg.K
-    assert N % K == 0, "pad N to a multiple of K"
-    Nk = N // K
+    # split-axis contract: the stacked master iterate (N_state) and the
+    # per-edge encrypted block (Nk) — column split keeps the historical
+    # N, N//K; row-split consensus stacks K full-width copies
+    N_state, Nk = wl.dims(A, K)
     spec = cfg.spec
 
     counter = OpCounter()
@@ -496,15 +503,28 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
     counter.phase = "init"
     ys = y / K if cfg.y_scale == "consistent" else y
     st = wl.init_state(np.asarray(A, np.float64),
-                       np.asarray(y, np.float64), ys, K)
+                       np.asarray(y, np.float64), ys, K,
+                       y_scale=cfg.y_scale)
+    agg_ctx = None
+    if wl.uses_secure_agg:
+        # row-split consensus: the z-update's cross-edge aggregate flows
+        # through secure aggregation — encrypted whenever this run has
+        # key material, through the bit-exact plaintext mirror otherwise
+        # (dedicated rng stream so the box's blinding draws stay put);
+        # its crypto ops and worker->aggregator bytes join the protocol
+        # accounting below
+        agg_ctx = workloads_mod.SecureAggContext.for_run(
+            spec, key, cfg.seed, counter, box.ct_bytes(1))
+        st.aux["secure_agg"] = agg_ctx
     edges = [EdgeNode(k, spec) for k in range(K)]
-    C_rowsums, u3s = [], []
+    C_rowsums, Bks, u3s = [], [], []
     for k, edge in enumerate(edges):
         Qk, mu, scale = wl.edge_setup(st, k)
         traffic["master->edge"] += Qk.nbytes
         Bk = edge.init_phase(Qk, mu, scale)
         traffic["edge->master"] += Bk.nbytes
         C_rowsums.append((Bk * scale) @ np.ones(Nk))
+        Bks.append(Bk)
         u3s.append(wl.share_vector(st, k, Bk))
         if cfg.collaborative and key is not None:
             edge.collab_setup(key.p2, key.phi_p2, key.g,
@@ -521,10 +541,24 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
 
     # --- Parallel privacy-computing phase ---------------------------------
     counter.phase = "iterate"
-    history = np.zeros((cfg.iters, N))
+    history = np.zeros((cfg.iters, N_state))
+    reshare_events = 0
 
     for t in range(cfg.iters):
-        x_new = np.zeros(N)
+        if wl.streaming:
+            # streaming contract: re-run the encrypted share phase for
+            # the edges whose data moved this round (u3 only; C_k is
+            # fixed per run).  Accounted in the "iterate" phase — a
+            # re-share is round-synchronous work, and the runtime's
+            # coalescing queue fuses these encs into the same launch as
+            # the round's (u1, u2) encryptions.
+            for k in wl.reshare(st, t):
+                u3s[k] = wl.share_vector(st, k, Bks[k])
+                c_alpha = box.encrypt(np.asarray(gamma1(u3s[k], spec)))
+                traffic["master->edge"] += box.ct_bytes(Nk)
+                edges[k].store_shared(c_alpha)
+                reshare_events += 1
+        x_new = np.zeros(N_state)
         for k, edge in enumerate(edges):
             sl = slice(k * Nk, (k + 1) * Nk)
             u1, u2 = wl.iter_inputs(st, k)
@@ -550,9 +584,12 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
         wl.global_update(st, x_new)
         history[t] = x_new
 
+    if agg_ctx is not None:
+        traffic["edge->master"] += agg_ctx.traffic_bytes
     stats = {"ops": counter.as_dict(), "traffic_bytes": dict(traffic),
              "key_bits": None if key is None else key.n.bit_length(),
-             "cipher": cfg.cipher, "workload": wl.name}
+             "cipher": cfg.cipher, "workload": wl.name,
+             "reshare_events": reshare_events}
     return ProtocolResult(x=st.x_prev, history=history, stats=stats,
                           stale_events=0)
 

@@ -100,6 +100,23 @@ def compress_tree_psum(grads, axis_name: str, cfg: CompressionConfig,
 # Paillier secure aggregation (host-level, FL-style)
 # ---------------------------------------------------------------------------
 
+def _quant_block(blk: np.ndarray, spec: QuantSpec) -> np.ndarray:
+    """The worker-side Gamma_2-style affine quantization — shared verbatim
+    by the encrypted path and its plaintext mirror, so the two stay
+    bit-identical by construction."""
+    return np.round(spec.delta * (np.clip(np.asarray(blk).reshape(-1),
+                                          spec.zmin, spec.zmax)
+                                  - spec.zmin) / spec.span).astype(np.int64)
+
+
+def _dequant_sum(tots, Kn: int, spec: QuantSpec) -> np.ndarray:
+    """sum_k (q_k s/Delta + zmin) = tot*s/Delta + K*zmin, per element."""
+    out = np.empty(len(tots))
+    for i, tot in enumerate(tots):
+        out[i] = tot * spec.span / spec.delta + Kn * spec.zmin
+    return out
+
+
 def paillier_aggregate(blocks: Sequence[np.ndarray], key: gold.PaillierKey,
                        spec: QuantSpec, rng: random.Random | None = None,
                        crt: bool = True) -> np.ndarray:
@@ -108,11 +125,17 @@ def paillier_aggregate(blocks: Sequence[np.ndarray], key: gold.PaillierKey,
     Each worker: q_k = Gamma_2-style affine quantization with the *protocol*
     range [zmin, zmax]; c_k = Enc(q_k). Aggregator: C = ⊕_k c_k. Master:
     sum = dequant(Dec(C)) - K*zmin-offset correction.
+
+    Because the quantized integers sum exactly under the homomorphism
+    (the total stays far below n), the result equals
+    :func:`plain_aggregate` on the same blocks bit-for-bit — the
+    property tests/test_secure_agg.py pins, and what lets the row-split
+    consensus workloads run this path on the encrypted cipher arms while
+    the plain arm mirrors it without key material.
     """
     rng = rng or random.Random(0)
     Kn = len(blocks)
     n_el = blocks[0].size
-    s = spec.span
     # worker batches of >= BATCH_MIN elements ride the batched CRT fast
     # path (one kernel launch per block, no per-element pow); tiny blocks
     # keep the scalar loops — both are bit-identical for the same rng.
@@ -125,8 +148,7 @@ def paillier_aggregate(blocks: Sequence[np.ndarray], key: gold.PaillierKey,
 
     agg = [1] * n_el
     for blk in blocks:
-        q = np.round(spec.delta * (np.clip(blk.reshape(-1), spec.zmin, spec.zmax)
-                                   - spec.zmin) / s).astype(np.int64)
+        q = _quant_block(blk, spec)
         if batched:
             cs = pb.enc_vec(bk, q, rng)
         else:
@@ -134,8 +156,23 @@ def paillier_aggregate(blocks: Sequence[np.ndarray], key: gold.PaillierKey,
         for i, c in enumerate(cs):
             agg[i] = (agg[i] * c) % key.n2          # ⊕ accumulate
     tots = pb.dec_vec(bk, agg) if batched else [dec(key, a) for a in agg]
-    out = np.empty(n_el)
-    for i, tot in enumerate(tots):
-        # sum_k (q_k s/Delta + zmin) = tot*s/Delta + K*zmin
-        out[i] = tot * s / spec.delta + Kn * spec.zmin
-    return out.reshape(blocks[0].shape)
+    return _dequant_sum(tots, Kn, spec).reshape(blocks[0].shape)
+
+
+def plain_aggregate(blocks: Sequence[np.ndarray],
+                    spec: QuantSpec) -> np.ndarray:
+    """Bit-exact plaintext mirror of :func:`paillier_aggregate`.
+
+    Same per-worker quantization, same (exact) integer summation, same
+    dequantization arithmetic — only the encryption layer is absent.
+    This is both the oracle the encrypted path is property-tested
+    against and the code the plain cipher arm's consensus aggregation
+    executes (so plain and encrypted trajectories agree bit-for-bit)."""
+    Kn = len(blocks)
+    n_el = blocks[0].size
+    agg = [0] * n_el
+    for blk in blocks:
+        q = _quant_block(blk, spec)
+        for i, qi in enumerate(q):
+            agg[i] += int(qi)
+    return _dequant_sum(agg, Kn, spec).reshape(blocks[0].shape)

@@ -26,6 +26,19 @@ Modes
 Per-edge response latency comes from ``cfg.latency_fn`` when given
 (reproducing the legacy knob), else from the :class:`CostModel` estimate
 of the edge's homomorphic step.
+
+Streaming workloads (``Workload.streaming``) re-run the share phase
+mid-run: at the top of each round the master asks the workload which
+edges' u3 changed, encrypts the fresh Gamma_1 vectors through the SAME
+coalescing queue as the round's (u1, u2) pairs — so re-shares fuse into
+the round's enc launch, zero extra kernel launches — and ships them as
+round-tagged ``"reshare"`` messages (stored edge-side without the share
+barrier's reply; the tag drops an older re-share that jitter or a
+retransmit delivers after a newer one).  Scheduler FIFO at equal
+timestamps keeps a re-share ahead of its round's ``"step"`` on the same
+link; under jitter a step may overtake it, in which case that edge's
+round runs on the previous segment's u3 — bounded staleness, never
+corruption.
 """
 from __future__ import annotations
 
@@ -53,6 +66,7 @@ class EdgeActor:
         self.name = edge_name(k)
         self.rt = rt
         self.node = protocol.EdgeNode(k, rt.cfg.spec)
+        self._share_round = -1   # newest re-share round stored so far
 
     def on_message(self, msg: Message) -> None:
         rt = self.rt
@@ -66,6 +80,17 @@ class EdgeActor:
         elif msg.tag == "share":
             self.node.store_shared(msg.payload)
             rt.transport.send(self.name, MASTER, "share_ok", self.k)
+        elif msg.tag == "reshare":
+            # streaming workloads: a mid-run u3 refresh — store and go,
+            # no barrier reply (the master never waits on re-shares).
+            # Round-tagged: jitter/retransmits can reorder deliveries,
+            # and an older segment's u3 must never overwrite a newer one
+            # (the initial share always lands first — the share phase
+            # barriers on share_ok before any reshare is sent).
+            t, c_alpha = msg.payload
+            if t > self._share_round:
+                self._share_round = t
+                self.node.store_shared(c_alpha)
         elif msg.tag == "step":
             t, cz, cv = msg.payload
             # eq. (13) chain; each op coalesces with the other edges' ops
@@ -100,19 +125,31 @@ class MasterActor:
                  wl: "protocol.workloads_mod.Workload"):
         self.rt = rt
         cfg = rt.cfg
-        self.A, self.y = A, y
         K, Nk = cfg.K, rt.nk
         ys = y / K if cfg.y_scale == "consistent" else y
         self.wl = wl
-        self.wst = wl.init_state(A, y, ys, K)   # workload iteration state
+        self.wst = wl.init_state(A, y, ys, K,   # workload iteration state
+                                 y_scale=cfg.y_scale)
+        self.agg_ctx = None
+        if wl.uses_secure_agg:
+            # row-split consensus: z-update aggregate through secure
+            # aggregation (bit-exact plaintext mirror on the plain arm);
+            # shares the protocol OpCounter, and its bytes are folded
+            # into the traffic stats at teardown (parity with
+            # run_protocol's accounting)
+            self.agg_ctx = protocol.workloads_mod.SecureAggContext.for_run(
+                cfg.spec, rt.key, cfg.seed, rt.counter, rt.box.ct_bytes(1))
+            self.wst.aux["secure_agg"] = self.agg_ctx
         self.edge_setups = [wl.edge_setup(self.wst, k) for k in range(K)]
         self.C_rowsums: list = [None] * K
+        self.Bks: list = [None] * K   # kept for streaming u3 refreshes
         self.u3s: list = [None] * K
         self._n_init = 0
         self._n_share = 0
+        self.reshare_events = 0
         # iterate-phase bookkeeping (mirrors run_protocol's master frame;
         # the (x, z, v) triple itself lives in the workload state)
-        N = A.shape[1]
+        N = K * rt.nk                 # stacked master iterate (wl.dims)
         self.history = np.zeros((cfg.iters, N))
         self.x_hat_cache: list = [None] * K   # (x_hat, w_sum, round)
         self._w_rounds: dict[int, dict[int, float]] = {}
@@ -143,6 +180,7 @@ class MasterActor:
             k, Bk = msg.payload
             scale = self.edge_setups[k][2]
             self.C_rowsums[k] = (Bk * scale) @ np.ones(self.rt.nk)
+            self.Bks[k] = Bk
             self.u3s[k] = self.wl.share_vector(self.wst, k, Bk)
             self._n_init += 1
             if self._n_init == self.rt.cfg.K:
@@ -172,6 +210,11 @@ class MasterActor:
         rt.transport.send(MASTER, edge_name(k), "share", c_alpha,
                           nbytes=rt.box.ct_bytes(rt.nk))
 
+    def _reshare_ready(self, k: int, t: int, c_alpha) -> None:
+        rt = self.rt
+        rt.transport.send(MASTER, edge_name(k), "reshare", (t, c_alpha),
+                          nbytes=rt.box.ct_bytes(rt.nk))
+
     # -- Parallel privacy-computing phase ---------------------------------
     def _iterate(self, t: int) -> None:
         rt, cfg = self.rt, self.rt.cfg
@@ -182,6 +225,23 @@ class MasterActor:
         self.finalized = False
         self.deadline_passed = False
         self.must_wait: set[int] = set()
+        if self.wl.streaming:
+            # streaming re-shares go FIRST so (a) the coalescing queue
+            # batches them into the same enc launch as this round's
+            # u1/u2 and (b) their rng draws keep run_protocol's order;
+            # the "reshare" message beats the "step" on the same link
+            # (scheduler FIFO at equal timestamps).  Under link jitter a
+            # step may overtake its re-share — the edge then computes on
+            # the previous segment's u3: staleness, never corruption.
+            for k in self.wl.reshare(self.wst, t):
+                self.u3s[k] = self.wl.share_vector(self.wst, k, self.Bks[k])
+                q_alpha = np.asarray(gamma1(self.u3s[k], cfg.spec))
+                # accounted in the "iterate" phase (round-synchronous
+                # work), matching run_protocol — and groupable with the
+                # round's u1/u2 encs without splitting a fused launch
+                rt.cq.submit("enc", (q_alpha,),
+                             partial(self._reshare_ready, k, t))
+                self.reshare_events += 1
         for k in range(cfg.K):
             u1, u2 = self.wl.iter_inputs(self.wst, k)
             self.w_cur[k] = float(np.sum(u1 + u2))
@@ -249,7 +309,7 @@ class MasterActor:
     def _finalize(self) -> None:
         rt, cfg = self.rt, self.rt.cfg
         self.finalized = True
-        self._x_new = np.zeros(self.A.shape[1])
+        self._x_new = np.zeros(cfg.K * rt.nk)
         self._n_dec = 0
         for k in range(cfg.K):
             if k in self.replies:
@@ -354,10 +414,12 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     (:func:`auto_hold_ticks`) — pass an int to override the heuristic.
     """
     rng = random.Random(cfg.seed)
-    M, N = A.shape
     K = cfg.K
-    assert N % K == 0, "pad N to a multiple of K"
-    nk = N // K
+    # split-axis contract (see workloads.base.Workload.dims): nk is the
+    # per-edge encrypted block — N/K on the column split, the full model
+    # width on row-split consensus (the state stacks K copies)
+    wl = protocol.resolve_workload(cfg, workload)
+    _, nk = wl.dims(A, K)
     mode = mode or ("deadline" if cfg.deadline is not None else "sync")
     if mode == "deadline" and cfg.deadline is None:
         raise ValueError("deadline mode needs cfg.deadline")
@@ -389,7 +451,6 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     rt = _Runtime(sched, transport, cq, box, key, counter, cfg, nk, mode,
                   cost, stale_limit)
 
-    wl = protocol.resolve_workload(cfg, workload)
     master = MasterActor(rt, np.asarray(A, np.float64),
                          np.asarray(y, np.float64), wl)
     transport.bind(MASTER, master.on_message)
@@ -406,12 +467,17 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
             f"runtime drained at t={sched.now:.4f}s before the protocol "
             f"finished (iteration {master.t}/{cfg.iters})")
 
+    traffic = dict(transport.traffic)
+    if master.agg_ctx is not None:
+        traffic["edge->master"] = traffic.get("edge->master", 0) \
+            + master.agg_ctx.traffic_bytes
     stats = {
         "ops": counter.as_dict(),
-        "traffic_bytes": dict(transport.traffic),
+        "traffic_bytes": traffic,
         "key_bits": None if key is None else key.n.bit_length(),
         "cipher": cfg.cipher,
         "workload": wl.name,
+        "reshare_events": master.reshare_events,
         "runtime": {
             "topology": topo.kind,
             "mode": mode,

@@ -9,12 +9,13 @@ contract and how to add a family.
 >>> from repro import workloads
 >>> wl = workloads.get("ridge", rho=1.0, lam=0.1)
 >>> sorted(workloads.names())
-['elastic_net', 'lasso', 'logistic', 'power_grid', 'ridge']
+['consensus_lasso', 'consensus_logistic', 'elastic_net', 'lasso', \
+'logistic', 'power_grid', 'ridge', 'streaming_lasso']
 """
 from __future__ import annotations
 
 from .base import (Workload, WorkloadInstance, WorkloadState,  # noqa: F401
-                   simulate_float)
+                   SecureAggContext, simulate_float)
 
 REGISTRY: dict[str, type[Workload]] = {}
 
@@ -53,4 +54,5 @@ def names() -> list[str]:
 
 
 # importing the family modules self-registers them
-from . import lasso, ridge, elastic_net, logistic, power_grid  # noqa: E402,F401
+from . import (lasso, ridge, elastic_net, logistic,  # noqa: E402,F401
+               power_grid, consensus, streaming)

@@ -19,9 +19,23 @@ under every cipher arm (scalar gold / batched gold / vec / adaptive).
 A :class:`Workload` names the pieces:
 
   * ``make_instance``   — synthetic data generator for the family;
+  * ``dims``            — the SPLIT-AXIS contract: how the master's
+    stacked iterate decomposes into per-edge encrypted blocks.  The
+    default is the paper's column split (features partitioned, block
+    length N/K); row-split (sample-parallel) consensus families override
+    it so every edge evaluates a full-width copy of the consensus
+    iterate (block length N, stacked state length K*N) — see
+    :mod:`repro.workloads.consensus`;
   * ``edge_setup``      — the (Q_k, mu, scale) shipped to edge k, which
     computes ``B_k = (Q_k + mu I)^{-1}`` and quantizes ``C_k = scale B_k``;
   * ``share_vector``    — u3_k, encrypted once (Gamma_1);
+  * ``reshare``         — the STREAMING contract: families that declare
+    ``streaming = True`` are asked at the top of every round which
+    edges' u3_k changed (time-varying data: streaming y, sliding
+    windows); the protocol re-runs the data-security-sharing phase for
+    exactly those edges — fresh Gamma_1 quantize -> encrypt -> ship —
+    on the same coalescing + CipherTensor pipeline as the round's
+    (u1, u2) encryptions, so a re-share costs no extra kernel launch;
   * ``iter_inputs``     — (u1_k, u2_k) for the current round (Gamma_2);
   * ``global_update``   — the master's Jacobi-ordered z/v/aux update;
   * ``objective`` / ``metrics`` / ``reference_solution`` — evaluation;
@@ -42,6 +56,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import random
 
 import numpy as np
 
@@ -59,15 +74,21 @@ class WorkloadInstance:
 
 class WorkloadState:
     """Master-side iteration state: the Jacobi (x, z, v) triple plus any
-    workload auxiliaries (gradients, cached block matrices, ...)."""
+    workload auxiliaries (gradients, cached block matrices, ...).
 
-    def __init__(self, A: np.ndarray, y: np.ndarray, ys: np.ndarray, K: int):
+    ``dims = (state_dim, block_dim)`` is the workload's split-axis
+    contract (:meth:`Workload.dims`): the stacked iterate has
+    ``state_dim == K * block_dim`` entries and ``sl(k)`` is edge k's
+    block of it.  ``None`` keeps the historical column split."""
+
+    def __init__(self, A: np.ndarray, y: np.ndarray, ys: np.ndarray, K: int,
+                 dims: tuple[int, int] | None = None):
         self.A = A
         self.y = y
         self.ys = ys
         self.K = K
-        self.Nk = A.shape[1] // K
-        N = A.shape[1]
+        N, self.Nk = dims if dims is not None \
+            else (A.shape[1], A.shape[1] // K)
         self.x_prev = np.zeros(N)
         self.z = np.zeros(N)
         self.v = np.zeros(N)
@@ -75,6 +96,67 @@ class WorkloadState:
 
     def sl(self, k: int) -> slice:
         return slice(k * self.Nk, (k + 1) * self.Nk)
+
+
+@dataclasses.dataclass
+class SecureAggContext:
+    """How a consensus workload's global aggregate crosses the network.
+
+    Installed into ``WorkloadState.aux["secure_agg"]`` by the protocol
+    drivers (never by ``simulate_float`` — the float baseline averages in
+    plain float64).  With a Paillier ``key`` the per-edge blocks flow
+    through :func:`repro.core.secure_agg.paillier_aggregate` — Gamma_2
+    quantize -> encrypt -> ⊕-combine -> only the SUM decrypted.  This
+    models the deployment dataflow (each block encrypted as its owning
+    worker would, individual contributions hidden from aggregator/relay
+    parties); in the single-process simulation the master plays all
+    roles, so the demonstrated value is the interaction pattern and its
+    op/traffic cost, not blindness of the key holder — see
+    :mod:`repro.workloads.consensus` for the scoping.  Without a key
+    (the plain cipher arm) the bit-exact plaintext mirror
+    :func:`~repro.core.secure_agg.plain_aggregate` runs the identical
+    quantize -> integer-sum -> dequantize arithmetic, which is why every
+    cipher arm produces the same trajectory bit-for-bit.
+
+    The aggregate's cost is part of the protocol's accounting contract:
+    every call bumps the shared ``counter`` with the LOGICAL crypto ops
+    (K*n encryptions, the ⊕-combine mulmods, n sum decryptions — same
+    structure whichever path runs, mirroring ``PlainBox``'s convention)
+    and accrues the worker->aggregator ciphertext bytes in
+    ``traffic_bytes`` (``ct_el_bytes`` per element: the cipher box's
+    wire width, 8 for the plain arm), which the drivers fold into
+    ``stats["traffic_bytes"]["edge->master"]``."""
+
+    spec: QuantSpec
+    key: object | None = None
+    rng: object | None = None
+    counter: object | None = None     # protocol OpCounter (shared)
+    ct_el_bytes: int = 8              # wire bytes per ciphertext element
+    traffic_bytes: int = 0            # accumulated worker->aggregator bytes
+
+    @classmethod
+    def for_run(cls, spec: QuantSpec, key, seed: int, counter,
+                ct_el_bytes: int) -> "SecureAggContext":
+        """The ONE construction rule both protocol drivers share —
+        encrypted-arm trajectory parity between ``run_protocol`` and the
+        runtime depends on the aggregation rng stream being derived
+        identically, so neither driver builds the context by hand."""
+        return cls(spec=spec, key=key,
+                   rng=None if key is None else random.Random(seed ^ 0xA66),
+                   counter=counter, ct_el_bytes=ct_el_bytes)
+
+    def aggregate(self, blocks: list[np.ndarray]) -> np.ndarray:
+        from ..core import secure_agg
+        Kn, n_el = len(blocks), blocks[0].size
+        if self.counter is not None:
+            self.counter.bump("enc", Kn * n_el)
+            self.counter.bump("mulmod", Kn * n_el)   # ⊕ accumulate
+            self.counter.bump("dec", n_el)
+        self.traffic_bytes += Kn * n_el * self.ct_el_bytes
+        if self.key is None:
+            return secure_agg.plain_aggregate(blocks, self.spec)
+        return secure_agg.paillier_aggregate(blocks, self.key, self.spec,
+                                             rng=self.rng)
 
 
 class Workload:
@@ -88,6 +170,23 @@ class Workload:
     """
 
     name = "base"
+    #: split axis of the distributed data: ``"column"`` (the paper's
+    #: feature split — each edge owns a column block of A and a slice of
+    #: x) or ``"row"`` (sample-parallel consensus — each edge owns its
+    #: own rows of A and iterates a full-width copy of x).  Informational
+    #: label; the operative contract is :meth:`dims`.
+    split = "column"
+    #: True for families whose per-edge data changes mid-run (streaming
+    #: y, sliding windows): the protocol calls :meth:`reshare` at the
+    #: top of every round and re-runs the encrypted share phase for the
+    #: edges it names.
+    streaming = False
+    #: True for families whose global update sums per-edge iterate
+    #: blocks through secure aggregation (row-split consensus): the
+    #: protocol installs a :class:`SecureAggContext` into the state so
+    #: the aggregate crosses the network encrypted (or through the
+    #: bit-exact plaintext mirror on the plain arm).
+    uses_secure_agg = False
     #: default quantization grid for ``calibrate_spec``.  Families whose
     #: iteration feeds the decrypted iterate back through data-dependent
     #: terms (logistic's gradient) amplify rounding error and override
@@ -109,12 +208,33 @@ class Workload:
                       seed: int = 0, **kw) -> WorkloadInstance:
         raise NotImplementedError
 
+    # -- split-axis contract ----------------------------------------------
+    def dims(self, A: np.ndarray, K: int) -> tuple[int, int]:
+        """``(state_dim, block_dim)`` of the distributed iterate.
+
+        ``block_dim`` is the length of every per-edge encrypted block
+        (the protocol's ciphertext batch size, Remark-2 chain width);
+        ``state_dim == K * block_dim`` is the master's stacked iterate.
+        Column split (default): x is partitioned, ``block_dim = N/K``.
+        Row split (consensus): every edge holds a full-width local copy,
+        ``block_dim = N`` and the state stacks K copies."""
+        N = A.shape[1]
+        if N % K:
+            raise ValueError(f"column split needs K | N ({N} % {K} != 0)")
+        return N, N // K
+
     # -- state ------------------------------------------------------------
     def init_state(self, A: np.ndarray, y: np.ndarray, ys: np.ndarray,
-                   K: int) -> WorkloadState:
-        return WorkloadState(np.asarray(A, np.float64),
-                             np.asarray(y, np.float64),
-                             np.asarray(ys, np.float64), K)
+                   K: int, y_scale: str = "consistent") -> WorkloadState:
+        """``y_scale`` records the driver's convention for deriving
+        ``ys`` from ``y`` ("consistent" = y/K), so hooks that rebuild
+        ``ys`` mid-run (streaming re-shares) keep it."""
+        A = np.asarray(A, np.float64)
+        st = WorkloadState(A, np.asarray(y, np.float64),
+                           np.asarray(ys, np.float64), K,
+                           dims=self.dims(A, K))
+        st.y_scale = y_scale
+        return st
 
     # -- initialization phase --------------------------------------------
     def edge_setup(self, st: WorkloadState, k: int
@@ -129,6 +249,20 @@ class Workload:
         """u3_k — encrypted once in the data-security-sharing phase."""
         Ak = st.A[:, st.sl(k)]
         return Bk @ (Ak.T @ st.ys)
+
+    # -- streaming contract ------------------------------------------------
+    def reshare(self, st: WorkloadState, t: int):
+        """Advance any time-varying data and name the edges to re-share.
+
+        Called by the protocol at the top of every round ``t`` when
+        ``streaming`` is True.  Mutate ``st`` (slide the window, ingest
+        the next y segment, ...) and return the iterable of edge indices
+        whose ``share_vector`` output changed — the protocol re-runs the
+        data-security-sharing phase for exactly those edges (fresh
+        Gamma_1 quantize -> encrypt -> ship, coalesced with the round's
+        u1/u2 encryptions).  ``C_k`` is fixed per run by contract: only
+        u3 may vary.  Return an empty iterable when nothing changed."""
+        return ()
 
     # -- parallel privacy-computing phase --------------------------------
     def iter_inputs(self, st: WorkloadState, k: int
@@ -158,6 +292,15 @@ class Workload:
         """What the distributed iteration converges to (closed form or a
         trusted independent solver) — the convergence-test oracle."""
         raise NotImplementedError
+
+    def fold_solution(self, x: np.ndarray, K: int) -> np.ndarray:
+        """Collapse the master's stacked iterate to one model estimate.
+
+        Identity for column split (the stacked iterate IS the model);
+        row-split consensus averages its K full-width copies.  Callers
+        that compare a protocol solution against an N-dimensional truth
+        (edge_sim, workload_zoo, the convergence tests) fold first."""
+        return x
 
     def metrics(self, inst: WorkloadInstance, x: np.ndarray) -> dict:
         out = {"objective": self.objective(inst.A, inst.y, x)}
@@ -197,29 +340,34 @@ def simulate_float(wl: Workload, A: np.ndarray, y: np.ndarray, K: int,
     """The workload's distributed iteration in plain float64 — no
     quantization, no encryption.  Returns ``(x, history)`` or, with
     ``track_range=True``, ``(x, history, vmax)`` where ``vmax`` is the
-    largest magnitude that entered any Gamma quantizer slot."""
+    largest magnitude that entered any Gamma quantizer slot (including
+    every re-shared u3 of a streaming family)."""
     A = np.asarray(A, np.float64)
     y = np.asarray(y, np.float64)
-    M, N = A.shape
-    assert N % K == 0, "pad N to a multiple of K"
-    Nk = N // K
+    N_state, Nk = wl.dims(A, K)
     ys = y / K if y_scale == "consistent" else y
-    st = wl.init_state(A, y, ys, K)
+    st = wl.init_state(A, y, ys, K, y_scale=y_scale)
     vmax = 0.0
-    Cs, u3s = [], []
+    Cs, Bks, u3s = [], [], []
     for k in range(K):
         Q, mu, scale = wl.edge_setup(st, k)
         Bk = np.linalg.inv(Q + mu * np.eye(Nk))
         C = scale * Bk
         u3 = wl.share_vector(st, k, Bk)
         Cs.append(C)
+        Bks.append(Bk)
         u3s.append(u3)
         if track_range:
             vmax = max(vmax, float(np.max(np.abs(C))),
                        float(np.max(np.abs(u3))) if u3.size else 0.0)
-    history = np.zeros((iters, N))
+    history = np.zeros((iters, N_state))
     for t in range(iters):
-        x_new = np.zeros(N)
+        if wl.streaming:
+            for k in wl.reshare(st, t):
+                u3s[k] = wl.share_vector(st, k, Bks[k])
+                if track_range and u3s[k].size:
+                    vmax = max(vmax, float(np.max(np.abs(u3s[k]))))
+        x_new = np.zeros(N_state)
         for k in range(K):
             sl = st.sl(k)
             u1, u2 = wl.iter_inputs(st, k)
@@ -227,6 +375,11 @@ def simulate_float(wl: Workload, A: np.ndarray, y: np.ndarray, K: int,
                 vmax = max(vmax, float(np.max(np.abs(u1))),
                            float(np.max(np.abs(u2))))
             x_new[sl] = u3s[k] + Cs[k] @ (u1 + u2)
+        if track_range and wl.uses_secure_agg:
+            # the secure-aggregation quantizer sees x_new + v (pre-update
+            # v) — cover it explicitly rather than relying on margin >= 2
+            # to absorb the |x| + |v| sum
+            vmax = max(vmax, float(np.max(np.abs(x_new + st.v))))
         wl.global_update(st, x_new)
         history[t] = x_new
     if track_range:

@@ -70,8 +70,9 @@ class LogisticWorkload(Workload):
         return WorkloadInstance(A=A, y=b, x_true=x)
 
     # -- state: cached block curvatures + the running full gradient -------
-    def init_state(self, A, y, ys, K) -> WorkloadState:
-        st = super().init_state(A, y, ys, K)
+    def init_state(self, A, y, ys, K,
+                   y_scale: str = "consistent") -> WorkloadState:
+        st = super().init_state(A, y, ys, K, y_scale=y_scale)
         # tau dominates the cross-block curvature ¼ A_k^T A_j the Jacobi
         # step drops (the global bound is ¼ sigma_max(A)^2)
         tau = 0.25 * float(np.linalg.norm(st.A, 2) ** 2)

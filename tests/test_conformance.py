@@ -1,10 +1,13 @@
 """Differential end-to-end conformance: every cipher arm, one protocol.
 
 Runs the full 3P-ADMM-PC2 protocol (K=4, small keys) under every box arm —
-scalar gold, batched limb-resident gold, vec, and adaptive dispatch — and
-for every conformance workload (the paper's LASSO plus, since the
-``repro.workloads`` refactor, ridge and logistic consensus training), and
-asserts the three invariants the next refactor hides behind:
+scalar gold, batched limb-resident gold, vec, and adaptive dispatch — for
+EVERY registered workload family: the paper's LASSO plus ridge, logistic,
+elastic_net, power_grid (column split), the row-split consensus families
+(consensus_lasso / consensus_logistic — block width N instead of N/K,
+z-update aggregate through secure aggregation) and streaming_lasso
+(mid-run encrypted re-shares of u3).  It asserts the three invariants the
+next refactor hides behind:
 
 * **bit-identical ciphertext streams**: every ciphertext any arm emits
   materializes to exactly the same Python ints, in the same order;
@@ -43,7 +46,13 @@ from repro.runtime.runner import run_on_runtime
 
 SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
 K, N, ITERS, KEY_BITS = 4, 32, 3, 128   # Nk = 8 == pb.BATCH_MIN
-WORKLOADS = ("lasso", "ridge", "logistic")
+# every registered family; the row-split consensus instances use a model
+# width of N/K so their per-edge block is the same nk = 8 as the rest
+WORKLOADS = ("lasso", "ridge", "logistic", "elastic_net", "power_grid",
+             "consensus_lasso", "consensus_logistic", "streaming_lasso")
+ROW_SPLIT = {"consensus_lasso", "consensus_logistic"}
+# streaming_lasso (period=2): one u3 re-share per edge at round t=2
+EXPECTED_RESHARES = {"streaming_lasso": 1}
 
 
 def _as_ints(c) -> list[int]:
@@ -89,17 +98,20 @@ def inst():
 
 
 def _workload_case(name, lasso_inst):
-    """(instance, spec, cfg overrides) for one conformance workload.
-    LASSO keeps the historical instance + fixed legacy spec (the
-    bit-compat pin); ridge/logistic get workload data + calibrated
+    """(workload, instance, spec, cfg overrides) for one conformance
+    workload.  LASSO keeps the historical instance + fixed legacy spec
+    (the bit-compat pin); the rest get workload data + calibrated
     ranges.  The cfg runs with the SAME (rho, lam) the calibration
-    rehearsed — a mismatch would void the in-range guarantee."""
+    rehearsed — a mismatch would void the in-range guarantee.  Row-split
+    instances use model width N/K so every family's encrypted block is
+    nk = 8 (== pb.BATCH_MIN, the batched-path boundary)."""
     if name == "lasso":
-        return lasso_inst, SPEC, {}
+        return None, lasso_inst, SPEC, {}
     wl = workloads.get_default(name)
-    winst = wl.make_instance(24, N, K, seed=1)
+    n = N // K if name in ROW_SPLIT else N
+    winst = wl.make_instance(24, n, K, seed=1)
     spec = wl.calibrate_spec(winst.A, winst.y, K, ITERS)
-    return winst, spec, {"rho": wl.rho, "lam": wl.lam}
+    return wl, winst, spec, {"rho": wl.rho, "lam": wl.lam}
 
 
 @pytest.fixture(scope="module", params=WORKLOADS)
@@ -107,7 +119,7 @@ def runs(request, inst):
     """All arms of one workload, each with a recorded ciphertext stream
     and its box."""
     wname = request.param
-    winst, spec, cfg_over = _workload_case(wname, inst)
+    wl, winst, spec, cfg_over = _workload_case(wname, inst)
     mp = pytest.MonkeyPatch()
     recorders: dict[str, RecordingBox] = {}
     real_make_box = protocol.make_box
@@ -144,7 +156,12 @@ def runs(request, inst):
             current["arm"] = arm
             cfg = dataclasses.replace(cfg, workload=wname, spec=spec,
                                       **cfg_over)
-            out[arm] = protocol.run_protocol(winst.A, winst.y, cfg)
+            # the explicit object (when we built one) carries the extra
+            # default_params the calibration rehearsed (elastic_net's l2,
+            # streaming_lasso's segments/period); lasso stays by-name —
+            # the historical resolution path is part of its pin
+            out[arm] = protocol.run_protocol(winst.A, winst.y, cfg,
+                                             workload=wl)
         # adaptive runs on the runtime (that is where AdaptiveBox lives);
         # the synthetic table routes enc/dec to gold and add/matvec to
         # vec, which exercises the cross-representation coercions
@@ -158,7 +175,7 @@ def runs(request, inst):
         out["adaptive"] = run_on_runtime(
             winst.A, winst.y,
             _cfg(cipher="auto", workload=wname, spec=spec, **cfg_over),
-            table=table)
+            table=table, workload=wl)
     finally:
         mp.undo()
     return {"results": out, "recorders": recorders, "inst": winst,
@@ -174,6 +191,9 @@ def test_trajectories_match_across_all_arms(runs):
     integer chain, for every conformance workload."""
     res = runs["results"]
     x_true = runs["inst"].x_true
+    width = res["plain"].history.shape[1]
+    if x_true.size != width:     # row split: the state stacks K copies
+        x_true = np.tile(x_true, width // x_true.size)
     for arm in ENCRYPTED_ARMS:
         assert np.array_equal(res["plain"].history, res[arm].history), \
             (runs["workload"], arm)
@@ -186,11 +206,16 @@ def test_trajectories_match_across_all_arms(runs):
 def test_ciphertext_streams_bit_identical(runs):
     """Same key, same rng stream, same values: the full ordered ciphertext
     stream is bit-identical whichever arm produced it — the encrypted
-    interaction pattern (share u3, then u1/u2 per round) is
-    workload-generic, so this holds for every family."""
+    interaction pattern (share u3, then u1/u2 per round, plus any
+    streaming re-shares of u3) is workload-generic, so this holds for
+    every family."""
     recs = runs["recorders"]
     ref = recs["gold_scalar"].enc_stream
-    assert len(ref) == K * (N // K) * (1 + 2 * ITERS)   # share + u1,u2/iter
+    nk = runs["results"]["plain"].history.shape[1] // K
+    reshares = EXPECTED_RESHARES.get(runs["workload"], 0)
+    # share + u1,u2 per iter + one u3 refresh per (edge, reshare round)
+    assert len(ref) == K * nk * (1 + 2 * ITERS + reshares)
+    assert runs["results"]["plain"].stats["reshare_events"] == K * reshares
     for arm in ("gold_batch", "vec", "adaptive"):
         assert recs[arm].enc_stream == ref, (runs["workload"], arm)
 
@@ -216,6 +241,39 @@ def test_gold_batch_converts_only_at_phase_boundaries(inst):
     protocol.run_protocol(inst.A, inst.y,
                           _cfg(cipher="gold", gold_batch=True))
     assert ctm.CONVERSIONS == {"to_ints": 0, "from_ints": 0}
+
+
+def test_streaming_reshare_stays_limb_resident(inst):
+    """Acceptance pin: a streaming run's mid-run re-shares go through the
+    SAME encrypted share path as the initial share — fresh Gamma_1
+    quantize -> batched encrypt -> store — with zero mid-phase
+    CipherTensor conversions: the re-shared alpha-hat enters the next
+    round's eq. (13) chain straight off its resident limbs."""
+    wl = workloads.get_default("streaming_lasso")
+    spec = wl.calibrate_spec(inst.A, inst.y, K, 5)
+    ctm.reset_conversion_stats()
+    r = protocol.run_protocol(
+        inst.A, inst.y,
+        _cfg(cipher="gold", gold_batch=True, workload="streaming_lasso",
+             iters=5, spec=spec, rho=wl.rho, lam=wl.lam),
+        workload=wl)
+    assert r.stats["reshare_events"] == 2 * K    # segments at t=2 and t=4
+    assert ctm.CONVERSIONS == {"to_ints": 0, "from_ints": 0}
+
+
+def test_streaming_reshare_changes_the_trajectory(inst):
+    """The re-share is live: the same instance run through plain lasso
+    (static y) and streaming_lasso (re-shared y) agree up to the first
+    re-share round and diverge right after it."""
+    wl = workloads.get_default("streaming_lasso")
+    stream = protocol.run_protocol(
+        inst.A, inst.y,
+        _cfg(cipher="plain", workload="streaming_lasso", iters=4),
+        workload=wl)
+    static = protocol.run_protocol(
+        inst.A, inst.y, _cfg(cipher="plain", workload="lasso", iters=4))
+    assert np.array_equal(stream.history[:2], static.history[:2])
+    assert not np.array_equal(stream.history[2], static.history[2])
 
 
 def test_gold_batch_emits_cipher_tensors(inst):

@@ -157,3 +157,44 @@ def test_out_of_range_plaintexts_wrap_like_encrypt_crt():
     r1, r2 = random.Random(2), random.Random(2)
     assert pb.enc_vec(bk, ms, r1) == \
         [gold.encrypt_crt(key, m, gold.rand_r(key, r2)) for m in ms]
+
+
+# ---------------------------------------------------------------------------
+# degenerate batch shapes (regressions for the coalescing/streaming paths)
+# ---------------------------------------------------------------------------
+
+def test_matvec_many_empty_fanin_returns_empty():
+    """B=0: a flush window with no matvec entries must not launch (the
+    coalescing queue and streaming re-share paths can legally produce
+    empty fan-ins); used to die computing limb widths over no exponents."""
+    bk = BKS[96]
+    assert pb.matvec_many(bk, np.zeros((0, 3, 3), dtype=object), []) == []
+    with pytest.raises(ValueError, match="ciphertext vectors for B="):
+        pb.matvec_many(bk, np.zeros((0, 3, 3), dtype=object),
+                       [[1, 2, 3]])
+
+
+def test_matvec_many_single_row_single_element():
+    """B=1 with a 1x1 block — the smallest CipherTensor a re-share round
+    can strand in its own launch — stays limb-resident and bit-exact."""
+    key, bk = KEYS[96], BKS[96]
+    cts = pb.enc_ct(bk, [5], random.Random(3))
+    assert len(cts) == 1 and not cts.ints_materialized
+    out = pb.matvec_many(bk, np.array([[[7]]], dtype=object), [cts])
+    (row,) = out
+    assert not row.ints_materialized           # CipherTensor in, CT out
+    assert row.to_ints() == [pow(cts.to_ints()[0], 7, key.n2)]
+    assert pb.dec_vec(bk, row) == [35]
+
+
+def test_enc_dec_ct_empty_batch_roundtrip():
+    """B=0 CipherTensor: encrypt/decrypt of an empty batch is a no-op
+    that keeps the (0, L16) limb layout intact end to end."""
+    key, bk = KEYS[96], BKS[96]
+    rng = random.Random(4)
+    state = rng.getstate()
+    cts = pb.enc_ct(bk, [], rng)
+    assert len(cts) == 0 and cts.shape[0] == 0
+    assert rng.getstate() == state             # no blinding draws consumed
+    assert pb.dec_vec(bk, cts) == []
+    assert cts.to_ints() == []

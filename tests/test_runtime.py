@@ -312,3 +312,117 @@ def test_lossy_links_recover_and_account_retransmits(inst):
     assert r.stats["traffic_bytes"] == ref.stats["traffic_bytes"]
     link_total = sum(r.stats["runtime"]["link_bytes"].values())
     assert link_total > sum(r.stats["traffic_bytes"].values())
+
+# ---------------------------------------------------------------------------
+# streaming re-shares on the runtime (mid-run encrypted share phase)
+# ---------------------------------------------------------------------------
+
+def _streaming_pair(segments: int):
+    """(workload, instance) for a streaming run; segments=1 never
+    re-shares, so it is the launch-count comparator."""
+    from repro import workloads
+    wl = workloads.get("streaming_lasso", rho=1.0, lam=0.05,
+                       segments=segments, period=2)
+    inst = make_lasso(24, 24, sparsity=0.1, noise=0.01, seed=1)
+    return wl, inst
+
+
+def test_streaming_reshare_runtime_matches_protocol():
+    """A mid-run re-share through the event-driven runtime reproduces the
+    synchronous reference bit-for-bit — ops, traffic, and re-share
+    telemetry included (the re-share enc rides the coalescing queue and
+    the 'reshare' message beats the round's 'step' on the same link)."""
+    wl, winst = _streaming_pair(segments=3)
+    cfg = protocol.ProtocolConfig(K=3, lam=0.05, iters=6, spec=SPEC,
+                                  cipher="plain", seed=0,
+                                  workload="streaming_lasso")
+    ref = protocol.run_protocol(winst.A, winst.y, cfg, workload=wl)
+    rt = run_on_runtime(winst.A, winst.y, cfg, workload=wl,
+                        topology=topology.hierarchical(3, fanout=2))
+    assert ref.stats["reshare_events"] == rt.stats["reshare_events"] == 6
+    assert np.array_equal(ref.history, rt.history)
+    assert ref.stats["traffic_bytes"] == rt.stats["traffic_bytes"]
+    assert ref.stats["ops"] == rt.stats["ops"]
+
+
+def test_streaming_reshare_is_zero_extra_launches():
+    """Acceptance pin for 'one batched launch': the re-share encryptions
+    coalesce into the same-tick enc launch of the round's u1/u2 pairs,
+    so a streaming run costs NO extra kernel launches over the identical
+    run that never re-shares."""
+    runs = {}
+    for segments in (1, 3):
+        wl, winst = _streaming_pair(segments)
+        cfg = protocol.ProtocolConfig(K=3, lam=0.05, iters=6, spec=SPEC,
+                                      cipher="plain", seed=0,
+                                      workload="streaming_lasso")
+        runs[segments] = run_on_runtime(winst.A, winst.y, cfg, workload=wl)
+    assert runs[1].stats["reshare_events"] == 0
+    assert runs[3].stats["reshare_events"] == 6      # t=2 and t=4, K=3
+    rt1, rt3 = runs[1].stats["runtime"], runs[3].stats["runtime"]
+    assert rt3["launches"] == rt1["launches"]
+    # the re-shared encs were extra ops sharing those launches
+    assert rt3["coalesced_ops"] == rt1["coalesced_ops"] + 6
+
+
+def test_streaming_reshare_deterministic_under_latency_trace():
+    """Fixed heterogeneous latency trace + coalesce_hold_ticks='auto':
+    two identical streaming runs replay the exact same launch/coalesce
+    telemetry and trajectory (re-shares do not perturb the deterministic
+    event order)."""
+    wl, winst = _streaming_pair(segments=3)
+    cfg = protocol.ProtocolConfig(K=3, lam=0.05, iters=6, spec=SPEC,
+                                  cipher="plain", seed=0,
+                                  workload="streaming_lasso")
+    per_link = {("master", "edge1"): LinkModel(latency_s=9e-3)}
+    runs = [run_on_runtime(winst.A, winst.y, cfg, workload=wl,
+                           per_link=per_link, coalesce_hold_ticks="auto",
+                           tick_s=1e-3, trace=True) for _ in range(2)]
+    r0, r1 = (r.stats["runtime"] for r in runs)
+    assert r0["coalesce_hold_ticks"] > 0             # spread detected
+    assert r0["trace"] == r1["trace"]
+    for key in ("launches", "coalesced_ops", "held_flushes"):
+        assert r0[key] == r1[key], key
+    assert np.array_equal(runs[0].history, runs[1].history)
+    # and the hold still reproduces the hold-free trajectory exactly
+    plainrun = run_on_runtime(winst.A, winst.y, cfg, workload=wl,
+                              per_link=per_link)
+    assert np.array_equal(runs[0].history, plainrun.history)
+
+
+def test_reshare_round_guard_drops_stale_delivery():
+    """Re-share messages are round-tagged: a retransmit/jitter-reordered
+    OLDER segment's u3 arriving after a newer one is dropped instead of
+    regressing the edge (the 'never corruption' half of the contract)."""
+    from repro.runtime import runner
+    from repro.runtime.transport import Message
+
+    class _Rt:
+        cfg = protocol.ProtocolConfig(spec=SPEC)
+
+    ea = runner.EdgeActor(0, _Rt())
+    msg = lambda t, p: Message(src="master", dst="edge0", tag="reshare",
+                               payload=(t, p), nbytes=0)
+    ea.on_message(msg(4, "segment2"))
+    assert ea.node.alpha_hat == "segment2"
+    ea.on_message(msg(2, "segment1"))          # late duplicate/stale copy
+    assert ea.node.alpha_hat == "segment2"     # newer share survives
+    ea.on_message(msg(6, "segment3"))
+    assert ea.node.alpha_hat == "segment3"
+
+
+def test_streaming_reshare_survives_jitter_and_drops():
+    """Lossy, jittery links with mid-run re-shares: the run completes,
+    every re-share fires, and the result stays in the clean run's
+    neighborhood (reordering degrades freshness, never correctness)."""
+    wl, winst = _streaming_pair(segments=3)
+    cfg = protocol.ProtocolConfig(K=3, lam=0.05, iters=8, spec=SPEC,
+                                  cipher="plain", seed=0,
+                                  workload="streaming_lasso")
+    link = LinkModel(jitter_s=2e-3, drop_prob=0.05, timeout_s=5e-3)
+    r = run_on_runtime(winst.A, winst.y, cfg, workload=wl, link=link)
+    assert r.stats["reshare_events"] == 6
+    assert r.stats["runtime"]["retransmits"] > 0
+    clean = run_on_runtime(winst.A, winst.y, cfg, workload=wl)
+    assert np.all(np.isfinite(r.history))
+    assert float(np.max(np.abs(r.x - clean.x))) < 0.5

@@ -21,7 +21,9 @@ NAMES = sorted(workloads.names())
 # iterations until the distributed fixed point is reached to ~1e-6; a
 # newly registered family gets the conservative default
 CONV_ITERS = {"lasso": 600, "ridge": 400, "elastic_net": 600,
-              "logistic": 3000, "power_grid": 800}
+              "logistic": 3000, "power_grid": 800,
+              "consensus_lasso": 1200, "consensus_logistic": 3000,
+              "streaming_lasso": 800}
 
 
 def _wl(name):
@@ -34,7 +36,10 @@ def _wl(name):
 
 def test_registry_contents():
     assert set(workloads.names()) >= {"lasso", "ridge", "elastic_net",
-                                      "logistic", "power_grid"}
+                                      "logistic", "power_grid",
+                                      "consensus_lasso",
+                                      "consensus_logistic",
+                                      "streaming_lasso"}
     with pytest.raises(KeyError, match="unknown workload"):
         workloads.get("svm")
 
@@ -54,13 +59,16 @@ def test_float_iteration_converges_to_reference(name):
     ridge's exact blockwise solve, lasso/elastic_net's per-block proximal
     solutions, logistic's CENTRALIZED full-batch-GD optimum (the fixed
     point of the prox-linear consensus scheme is the true regularized
-    optimum), power_grid's per-bus lasso."""
+    optimum), power_grid's per-bus lasso, the row-split consensus
+    families' CENTRALIZED pooled-data optima, streaming_lasso's
+    final-segment fixed point.  Row-split states stack K copies —
+    ``fold_solution`` collapses them (identity on column split)."""
     wl = _wl(name)
     inst = wl.make_instance(36, 24, 4, seed=2)
     x, _ = simulate_float(wl, inst.A, inst.y, 4,
                            CONV_ITERS.get(name, 3000))
     ref = wl.reference_solution(inst.A, inst.y, 4)
-    assert float(np.max(np.abs(x - ref))) < 1e-5, name
+    assert float(np.max(np.abs(wl.fold_solution(x, 4) - ref))) < 1e-5, name
 
 
 @pytest.mark.parametrize("name", NAMES)
@@ -193,3 +201,228 @@ def test_vec_protocol_big_delta_matches_plain():
     vec = protocol.run_protocol(inst.A, inst.y,
                                 protocol.ProtocolConfig(cipher="vec", **kw))
     assert np.array_equal(plain.history, vec.history)
+
+
+# ---------------------------------------------------------------------------
+# row-split consensus: split-axis contract + secure aggregation routing
+# ---------------------------------------------------------------------------
+
+def test_row_split_dims_contract():
+    """Row split: block width = model width, state stacks K copies, and
+    the divisibility requirement moves from N to M (each edge owns an
+    equal row block)."""
+    wl = _wl("consensus_lasso")
+    inst = wl.make_instance(36, 10, 4, seed=0)     # M padded 36 -> 36
+    assert inst.A.shape[0] % 4 == 0
+    assert wl.dims(inst.A, 4) == (40, 10)
+    with pytest.raises(ValueError, match="row split needs"):
+        wl.dims(np.zeros((10, 6)), 4)
+    # column split unchanged: N divisibility still enforced
+    with pytest.raises(ValueError, match="column split needs"):
+        _wl("lasso").dims(np.zeros((8, 10)), 4)
+
+
+def test_consensus_edges_hold_own_rows():
+    """Each edge's (Q_k, u3_k) derive from ITS OWN rows of A only: zeroing
+    any other edge's rows leaves edge k's init/share material unchanged."""
+    wl = _wl("consensus_lasso")
+    inst = wl.make_instance(16, 6, 4, seed=3)
+    st = wl.init_state(inst.A, inst.y, inst.y / 4, 4)
+    Q1, mu, scale = wl.edge_setup(st, 1)
+    B1 = np.linalg.inv(Q1 + mu * np.eye(6))
+    u3_1 = wl.share_vector(st, 1, B1)
+    A_masked = inst.A.copy()
+    A_masked[8:] = 0.0                     # wipe edges 2 and 3
+    st2 = wl.init_state(A_masked, inst.y, inst.y / 4, 4)
+    Q1b, _, _ = wl.edge_setup(st2, 1)
+    assert np.array_equal(Q1, Q1b)
+    assert np.array_equal(u3_1, wl.share_vector(st2, 1, B1))
+
+
+def test_consensus_aggregate_routes_through_paillier_aggregate(monkeypatch):
+    """With key material the consensus z-update's cross-edge sum flows
+    through secure_agg.paillier_aggregate (Gamma_2 quantize -> encrypt ->
+    ⊕-combine -> master-only decrypt); the plain arm takes the bit-exact
+    plaintext mirror — and the trajectories agree bit-for-bit."""
+    from repro.core import secure_agg
+
+    wl = _wl("consensus_lasso")
+    inst = wl.make_instance(16, 8, 4, seed=1)
+    iters = 3
+    spec = wl.calibrate_spec(inst.A, inst.y, 4, iters)
+    kw = dict(K=4, rho=wl.rho, lam=wl.lam, iters=iters, spec=spec,
+              seed=0, workload="consensus_lasso", key_bits=128)
+    calls = {"enc": 0, "plain": 0}
+    real_enc, real_plain = (secure_agg.paillier_aggregate,
+                            secure_agg.plain_aggregate)
+
+    def spy_enc(*a, **k):
+        calls["enc"] += 1
+        return real_enc(*a, **k)
+
+    def spy_plain(*a, **k):
+        calls["plain"] += 1
+        return real_plain(*a, **k)
+
+    monkeypatch.setattr(secure_agg, "paillier_aggregate", spy_enc)
+    monkeypatch.setattr(secure_agg, "plain_aggregate", spy_plain)
+    gold_r = protocol.run_protocol(
+        inst.A, inst.y, protocol.ProtocolConfig(cipher="gold", **kw))
+    assert calls == {"enc": iters, "plain": 0}      # one aggregate/round
+    plain_r = protocol.run_protocol(
+        inst.A, inst.y, protocol.ProtocolConfig(cipher="plain", **kw))
+    assert calls == {"enc": iters, "plain": iters}
+    assert np.array_equal(gold_r.history, plain_r.history)
+
+
+def test_consensus_float_baseline_has_no_secure_agg():
+    """simulate_float is the UNQUANTIZED baseline: no SecureAggContext is
+    installed, the aggregate is a plain float mean — so the bench's
+    mse_vs_float genuinely measures the protocol's quantization gap."""
+    wl = _wl("consensus_lasso")
+    inst = wl.make_instance(16, 6, 4, seed=2)
+    st = wl.init_state(inst.A, inst.y, inst.y / 4, 4)
+    assert "secure_agg" not in st.aux
+    x, _ = simulate_float(wl, inst.A, inst.y, 4, 5)
+    assert np.all(np.isfinite(x))
+
+
+# ---------------------------------------------------------------------------
+# streaming: the reshare contract
+# ---------------------------------------------------------------------------
+
+def test_streaming_reshare_updates_share_vector():
+    """reshare() advances the segment and the re-shared u3_k equals
+    share_vector on the new data — while C_k (edge_setup) stays fixed."""
+    wl = workloads.get("streaming_lasso", rho=1.0, lam=0.05,
+                       segments=3, period=2)
+    inst = wl.make_instance(18, 12, 3, seed=0)
+    st = wl.init_state(inst.A, inst.y, inst.y / 3, 3)
+    Q0, mu, _ = wl.edge_setup(st, 0)
+    B0 = np.linalg.inv(Q0 + mu * np.eye(4))
+    u3_before = wl.share_vector(st, 0, B0)
+    assert list(wl.reshare(st, 0)) == []            # segment 0 == given y
+    assert list(wl.reshare(st, 1)) == []
+    assert list(wl.reshare(st, 2)) == [0, 1, 2]     # segment 1 arrives
+    u3_after = wl.share_vector(st, 0, B0)
+    assert not np.array_equal(u3_before, u3_after)
+    Y = wl.stream_schedule(inst.A, inst.y)
+    assert np.array_equal(st.y, Y[1])
+    Q0b, _, _ = wl.edge_setup(st, 0)
+    assert np.array_equal(Q0, Q0b)                  # C_k fixed per run
+    assert list(wl.reshare(st, 3)) == []            # same segment: no-op
+    assert list(wl.reshare(st, 99)) == [0, 1, 2]    # clamps to last
+
+
+def test_streaming_schedule_deterministic():
+    """The stream is a pure function of (A, y, params): every arm and the
+    float baseline replay the identical segments."""
+    wl = workloads.get_default("streaming_lasso")
+    inst = wl.make_instance(18, 12, 3, seed=5)
+    Y1 = wl.stream_schedule(inst.A, inst.y)
+    Y2 = wl.stream_schedule(inst.A, inst.y)
+    assert np.array_equal(Y1, Y2)
+    assert Y1.shape == (3, 18)
+    assert np.array_equal(Y1[0], inst.y)
+    assert not np.array_equal(Y1[1], Y1[0])
+
+
+def test_streaming_protocol_tracks_final_segment():
+    """After the stream ends the quantized protocol keeps iterating on
+    the final segment and lands near ITS lasso fixed point, not the
+    initial segment's."""
+    wl = workloads.get("streaming_lasso", rho=1.0, lam=0.05,
+                       segments=2, period=2)
+    inst = wl.make_instance(18, 12, 3, seed=1)
+    iters = 300
+    spec = wl.calibrate_spec(inst.A, inst.y, 3, iters)
+    r = protocol.run_protocol(
+        inst.A, inst.y,
+        protocol.ProtocolConfig(K=3, rho=wl.rho, lam=wl.lam, iters=iters,
+                                spec=spec, cipher="plain", seed=0),
+        workload=wl)
+    ref_final = wl.reference_solution(inst.A, inst.y, 3)
+    static = workloads.get("lasso", rho=1.0, lam=0.05)
+    ref_initial = static.reference_solution(inst.A, inst.y, 3)
+    assert float(np.max(np.abs(r.x - ref_final))) < 1e-2
+    assert float(np.max(np.abs(r.x - ref_initial))) > \
+        5 * float(np.max(np.abs(r.x - ref_final)))
+
+
+def test_streaming_reshare_respects_paper_y_scale():
+    """A y_scale="paper" run keeps the unscaled-y convention across
+    re-shares (regression: reshare used to hard-code the /K of
+    y_scale="consistent", silently flipping normalization mid-run)."""
+    wl = workloads.get("streaming_lasso", rho=1.0, lam=0.05,
+                       segments=2, period=2)
+    inst = wl.make_instance(18, 12, 3, seed=1)
+    st = wl.init_state(inst.A, inst.y, inst.y, 3, y_scale="paper")
+    assert list(wl.reshare(st, 2)) == [0, 1, 2]
+    Y = wl.stream_schedule(inst.A, inst.y)
+    assert np.array_equal(st.ys, Y[1])              # no stray /K
+    # and the protocol tracks the paper-scaled float baseline
+    iters = 6
+    spec = wl.calibrate_spec(inst.A, inst.y, 3, iters, y_scale="paper")
+    xf, hf = simulate_float(wl, inst.A, inst.y, 3, iters, y_scale="paper")
+    r = protocol.run_protocol(
+        inst.A, inst.y,
+        protocol.ProtocolConfig(K=3, rho=wl.rho, lam=wl.lam, iters=iters,
+                                spec=spec, cipher="plain", seed=0,
+                                y_scale="paper"),
+        workload=wl)
+    assert float(np.max(np.abs(r.history - hf))) < 1e-2
+
+
+def test_consensus_aggregate_is_accounted():
+    """The secure aggregate joins the protocol accounting: per round it
+    adds K*n encryptions, K*n ⊕-mulmods and n decryptions to the iterate
+    phase, and K*n ciphertext elements of edge->master traffic — on the
+    plain arm and the encrypted arms alike (logical-op parity)."""
+    wl = _wl("consensus_lasso")
+    inst = wl.make_instance(16, 8, 4, seed=1)
+    iters = 2
+    spec = wl.calibrate_spec(inst.A, inst.y, 4, iters)
+    kw = dict(K=4, rho=wl.rho, lam=wl.lam, iters=iters, spec=spec,
+              seed=0, workload="consensus_lasso")
+    plain = protocol.run_protocol(inst.A, inst.y,
+                                  protocol.ProtocolConfig(cipher="plain",
+                                                          **kw))
+    gold_r = protocol.run_protocol(inst.A, inst.y,
+                                   protocol.ProtocolConfig(cipher="gold",
+                                                           key_bits=128,
+                                                           **kw))
+    n, K = 8, 4
+    # eq.-13 chain: (2 u-vecs + 1 u3 share)*n per edge... iterate-phase
+    # encs = 2*K*n per round; the aggregate adds K*n more per round
+    it_plain = plain.stats["ops"]["iterate"]
+    assert it_plain["enc"] == iters * (2 * K * n + K * n)
+    assert it_plain["dec"] == iters * (K * n + n)
+    assert plain.stats["ops"] == gold_r.stats["ops"]   # logical-op parity
+    # aggregate bytes ride edge->master at the arm's ciphertext width
+    overhead_plain = plain.stats["traffic_bytes"]["edge->master"]
+    overhead_gold = gold_r.stats["traffic_bytes"]["edge->master"]
+    assert overhead_plain >= iters * K * n * 8         # 8 B/el plain ints
+    key_bytes = (gold_r.stats["key_bits"] * 2 + 7) // 8
+    assert overhead_gold - overhead_plain >= \
+        iters * K * n * (key_bytes - 8) - K * n * 8 * iters
+
+
+def test_consensus_calibration_covers_aggregate_slot():
+    """The rehearsal tracks |x_new + v| (the secure-agg quantizer's
+    input) as its own range slot, so the in-range contract holds even at
+    margins below 2 (regression: it used to hold only because the
+    default margin=2 absorbed the |x| + |v| triangle bound)."""
+    wl = _wl("consensus_lasso")
+    inst = wl.make_instance(16, 8, 4, seed=3)
+    iters = 10
+    spec = wl.calibrate_spec(inst.A, inst.y, 4, iters, margin=1.2)
+    _, hf, vmax = simulate_float(wl, inst.A, inst.y, 4, iters,
+                                 track_range=True)
+    assert spec.zmax >= 1.2 * vmax * 0.999     # slot tracked pre-margin
+    xf, _ = simulate_float(wl, inst.A, inst.y, 4, iters)
+    r = protocol.run_protocol(
+        inst.A, inst.y,
+        protocol.ProtocolConfig(K=4, rho=wl.rho, lam=wl.lam, iters=iters,
+                                spec=spec, cipher="plain", seed=0),
+        workload=wl)
+    assert float(np.max(np.abs(r.x - xf))) < 1e-2
