@@ -55,10 +55,11 @@ from repro.core.quantization import QuantSpec
 from repro.data.synthetic import make_lasso
 from repro.runtime import LinkModel, topology as topo_mod
 from repro.runtime.runner import run_on_runtime
+from repro.obs import metrics as obs_metrics
 try:
-    from .common import emit, timeit
+    from .common import BENCH_SCHEMA_VERSION, emit, timeit
 except ImportError:          # direct script run: python benchmarks/bench_topology.py
-    from common import emit, timeit
+    from common import BENCH_SCHEMA_VERSION, emit, timeit
 
 TOPOLOGIES = ("star", "ring", "hierarchical")
 EDGE_COUNTS = (4, 8, 16, 32)
@@ -102,6 +103,8 @@ def _sweep(rows: list, inst, edge_counts, topologies, iters) -> tuple[list, dict
                 "final_mse": float(mse[-1]),
                 "traffic_bytes": r.stats["traffic_bytes"],
                 "events": r.stats["runtime"]["events"],
+                # driver-independent RunReport core (ops, bytes, MSE curve)
+                "report": obs_metrics.report_core(r.stats),
             })
             emit(rows, f"topo_{kind}_K{K}",
                  t_hit if t_hit is not None else float("nan"),
@@ -134,7 +137,9 @@ def _op_micro(rows: list) -> dict:
         tb, ts = timeit(batched), timeit(scalar)
         out[op] = {"batched_us_per_el": tb / GOLD_BATCH * 1e6,
                    "scalar_us_per_el": ts / GOLD_BATCH * 1e6,
-                   "speedup_vs_scalar": ts / tb}
+                   "speedup_vs_scalar": ts / tb,
+                   "batched_timing": tb.as_dict(),
+                   "scalar_timing": ts.as_dict()}
         emit(rows, f"topo_goldfast_{op}", tb / GOLD_BATCH,
              derived=f"speedup_vs_scalar={ts / tb:.3f}")
     return out
@@ -197,6 +202,9 @@ def _gold_protocol_speedup(rows: list, inst) -> dict:
         "host_conversions": conversions,
         "coalesced_ops": runs[True][1].stats["runtime"]["coalesced_ops"],
         "launches": runs[True][1].stats["runtime"]["launches"],
+        # full coalescing telemetry from the warm batched run: width
+        # histogram + cold/warm launch wall distributions
+        "coalesce": runs[True][1].stats["runtime"]["coalesce"],
     }
 
 
@@ -271,7 +279,8 @@ def run(rows: list) -> None:
     }
 
     with open(OUT, "w") as f:
-        json.dump({"mse_targets": {str(k): v for k, v in targets.items()},
+        json.dump({"schema_version": BENCH_SCHEMA_VERSION,
+                   "mse_targets": {str(k): v for k, v in targets.items()},
                    "link": dataclasses.asdict(LINK),
                    "results": results,
                    "large_n": {"M": M_LARGE, "N": N_LARGE,

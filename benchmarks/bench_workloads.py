@@ -34,17 +34,17 @@ or via ``python -m benchmarks.run --bench workloads [--smoke]`` —
 from __future__ import annotations
 
 import json
-import time
 
 import numpy as np
 
 from repro import workloads
 from repro.core import protocol
+from repro.obs import metrics as obs_metrics
 from repro.workloads.base import simulate_float
 try:
-    from .common import emit
+    from .common import BENCH_SCHEMA_VERSION, emit, timeit
 except ImportError:          # direct script run
-    from common import emit
+    from common import BENCH_SCHEMA_VERSION, emit, timeit
 
 EDGE_COUNTS = (4, 16, 64)
 M, N, ITERS = 96, 128, 40
@@ -101,6 +101,8 @@ def _accuracy_sweep(rows, name, wl, edge_counts, m, n, iters):
             "within_tol": bool(mse < TOL_MSE),
             "reshare_events": r.stats.get("reshare_events", 0),
             "metrics": wl.metrics(inst, r.x),
+            # driver-independent RunReport core (ops, bytes, MSE curve)
+            "report": obs_metrics.report_core(r.stats),
         }
         out.append(entry)
         emit(rows, f"workloads_{name}_K{K}", 0.0,
@@ -117,17 +119,27 @@ def _arm_walls(rows, name, wl, m, n, iters):
             cipher="plain", seed=0, workload=name), workload=wl)
     out = {}
     for arm, cfg in _arm_cfgs(wl, spec, iters).items():
-        t0 = time.perf_counter()
-        if arm == "auto":
-            from repro.runtime.runner import run_on_runtime
-            r = run_on_runtime(inst.A, inst.y, cfg, workload=wl,
-                               table=_synthetic_table())
-        else:
-            r = protocol.run_protocol(inst.A, inst.y, cfg, workload=wl)
-        wall = time.perf_counter() - t0
+        got = {}
+
+        def once(arm=arm, cfg=cfg, got=got):
+            if arm == "auto":
+                from repro.runtime.runner import run_on_runtime
+                got["r"] = run_on_runtime(inst.A, inst.y, cfg, workload=wl,
+                                          table=_synthetic_table())
+            else:
+                got["r"] = protocol.run_protocol(inst.A, inst.y, cfg,
+                                                 workload=wl)
+
+        # warmup=0 keeps the cold first call in the distribution (the old
+        # single-measurement number was cold); the float value stays the
+        # median over both samples
+        t = timeit(once, repeat=2, warmup=0)
+        r = got["r"]
         bit_exact = bool(np.array_equal(r.history, plain.history))
-        out[arm] = {"wall_s": wall, "bit_exact": bit_exact}
-        emit(rows, f"workloads_{name}_arm_{arm}", wall,
+        out[arm] = {"wall_s": float(t), "timing": t.as_dict(),
+                    "bit_exact": bit_exact,
+                    "report": obs_metrics.report_core(r.stats)}
+        emit(rows, f"workloads_{name}_arm_{arm}", float(t),
              derived=f"bit_exact={bit_exact}")
     return out
 
@@ -146,7 +158,8 @@ def run(rows: list, smoke: bool = False) -> None:
         else:
             arms[name] = _arm_walls(rows, name, wl, 24, 32, arm_iters)
     with open(OUT_SMOKE if smoke else OUT, "w") as f:
-        json.dump({"dims": {"M": m, "N": n, "iters": iters,
+        json.dump({"schema_version": BENCH_SCHEMA_VERSION,
+                   "dims": {"M": m, "N": n, "iters": iters,
                             "edge_counts": list(edge_counts),
                             "smoke": smoke},
                    "tol_mse": TOL_MSE,
@@ -163,16 +176,22 @@ def _arm_walls_smoke(rows, name, wl, m, n, iters):
     plain = protocol.run_protocol(
         inst.A, inst.y,
         protocol.ProtocolConfig(cipher="plain", **kw), workload=wl)
-    t0 = time.perf_counter()
-    r = protocol.run_protocol(
-        inst.A, inst.y,
-        protocol.ProtocolConfig(cipher="gold", key_bits=ARM_KEY_BITS,
-                                gold_batch=True, **kw), workload=wl)
-    wall = time.perf_counter() - t0
+    got = {}
+
+    def once():
+        got["r"] = protocol.run_protocol(
+            inst.A, inst.y,
+            protocol.ProtocolConfig(cipher="gold", key_bits=ARM_KEY_BITS,
+                                    gold_batch=True, **kw), workload=wl)
+
+    t = timeit(once, repeat=1, warmup=0)
+    r = got["r"]
     bit_exact = bool(np.array_equal(r.history, plain.history))
-    emit(rows, f"workloads_{name}_arm_gold_batch", wall,
+    emit(rows, f"workloads_{name}_arm_gold_batch", float(t),
          derived=f"bit_exact={bit_exact}")
-    return {"gold_batch": {"wall_s": wall, "bit_exact": bit_exact}}
+    return {"gold_batch": {"wall_s": float(t), "timing": t.as_dict(),
+                           "bit_exact": bit_exact,
+                           "report": obs_metrics.report_core(r.stats)}}
 
 
 if __name__ == "__main__":

@@ -5,9 +5,55 @@ import time
 
 import numpy as np
 
+#: version stamped into every BENCH_*.json top level; bump on breaking
+#: layout changes (scripts/check_bench_schema.py validates against it)
+BENCH_SCHEMA_VERSION = 1
 
-def timeit(fn, *args, repeat: int = 3, warmup: int = 1, **kw) -> float:
-    """Median wall seconds per call."""
+
+class TimingResult(float):
+    """Median wall seconds per call, plus the sample distribution.
+
+    A ``float`` subclass whose VALUE is the median — every existing
+    consumer that does arithmetic on ``timeit(...)`` keeps working — with
+    the raw samples and percentile fields riding along for BENCH_*.json
+    rows (``.as_dict()``).
+    """
+
+    def __new__(cls, samples):
+        samples = [float(s) for s in samples]
+        self = super().__new__(cls, float(np.median(samples)))
+        self.samples = samples
+        return self
+
+    @property
+    def n(self) -> int:
+        return len(self.samples)
+
+    @property
+    def p50(self) -> float:
+        return float(np.percentile(self.samples, 50))
+
+    @property
+    def p95(self) -> float:
+        return float(np.percentile(self.samples, 95))
+
+    @property
+    def min(self) -> float:
+        return float(np.min(self.samples))
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.samples))
+
+    def as_dict(self) -> dict:
+        return {"p50": self.p50, "p95": self.p95, "min": self.min,
+                "mean": self.mean, "n": self.n, "samples": self.samples}
+
+
+def timeit(fn, *args, repeat: int = 3, warmup: int = 1,
+           **kw) -> TimingResult:
+    """Median wall seconds per call (a :class:`TimingResult`: the float
+    value is the median, ``.as_dict()`` carries the distribution)."""
     for _ in range(warmup):
         fn(*args, **kw)
     ts = []
@@ -15,7 +61,7 @@ def timeit(fn, *args, repeat: int = 3, warmup: int = 1, **kw) -> float:
         t0 = time.perf_counter()
         fn(*args, **kw)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return TimingResult(ts)
 
 
 def emit(rows: list, name: str, seconds: float, derived: str = ""):

@@ -1,0 +1,100 @@
+"""Schema lint for benchmark artifacts and exported traces.
+
+CI runs ``python -m scripts.check_bench_schema`` from the repo root (next
+to the docs-lint step in .github/workflows/ci.yml) so the committed
+``BENCH_*.json`` files and any ``*.trace.json`` chrome-trace exports
+can't drift from the versioned schemas:
+
+* every ``BENCH_*.json`` must carry the top-level ``schema_version``
+  (``benchmarks.common.BENCH_SCHEMA_VERSION``) and every embedded
+  RunReport core (``"report"`` keys anywhere in the tree) must validate
+  against :func:`repro.obs.metrics.validate_report_core`;
+* every trace file must validate against
+  :func:`repro.obs.chrome_trace.validate` (chrome-trace event structure,
+  span categories, embedded RunReport).
+
+Pass explicit paths to check specific files (used by the CI smoke step on
+the fresh trace it just produced)::
+
+  PYTHONPATH=src python -m scripts.check_bench_schema out.trace.json
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+BENCH_GLOB = "BENCH_*.json"
+TRACE_GLOB = "*.trace.json"
+
+
+def _iter_reports(obj, path="$"):
+    """Yield ``(json_path, report)`` for every embedded RunReport core."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if k in ("report", "runReport") and isinstance(v, dict):
+                yield f"{path}.{k}", v
+            else:
+                yield from _iter_reports(v, f"{path}.{k}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _iter_reports(v, f"{path}[{i}]")
+
+
+def check_bench(path: pathlib.Path) -> list[str]:
+    from benchmarks.common import BENCH_SCHEMA_VERSION
+    from repro.obs.metrics import validate_report_core
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable JSON ({e})"]
+    errors = []
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be an object"]
+    if doc.get("schema_version") != BENCH_SCHEMA_VERSION:
+        errors.append(f"{path}: schema_version "
+                      f"{doc.get('schema_version')!r} != "
+                      f"{BENCH_SCHEMA_VERSION} (regenerate with "
+                      f"python -m benchmarks.run)")
+    for where, report in _iter_reports(doc):
+        errors.extend(validate_report_core(report, f"{path}:{where}"))
+    return errors
+
+
+def check_trace(path: pathlib.Path) -> list[str]:
+    from repro.obs import chrome_trace
+    try:
+        doc = chrome_trace.load(str(path))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable JSON ({e})"]
+    return chrome_trace.validate(doc, str(path))
+
+
+def check_path(path: pathlib.Path) -> list[str]:
+    if path.name.endswith(".trace.json"):
+        return check_trace(path)
+    return check_bench(path)
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = pathlib.Path.cwd()
+    if argv:
+        paths = [pathlib.Path(a) for a in argv]
+    else:
+        paths = sorted(root.glob(BENCH_GLOB)) + sorted(root.glob(TRACE_GLOB))
+    errors: list[str] = []
+    for p in paths:
+        if not p.exists():
+            errors.append(f"{p}: no such file")
+            continue
+        errors.extend(check_path(p))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(paths)} artifact(s): "
+          f"{'OK' if not errors else f'{len(errors)} schema error(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

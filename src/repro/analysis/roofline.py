@@ -132,3 +132,64 @@ def model_flops(cfg, shape_kind: str, seq: int, batch: int) -> float:
     if shape_kind == "prefill":
         return 2.0 * n * seq * batch
     return 2.0 * n * batch      # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# Limb-op roofline for the encrypted ADMM stack (repro.obs RunReports)
+# ---------------------------------------------------------------------------
+
+LIMB_BITS = 16                 # the kernels' limb width (bigint.py)
+# Assumed peak 16-bit limb-multiply throughput for the reference device.
+# This is an ORDER-OF-MAGNITUDE anchor, not a measured number: one modern
+# CPU core retiring ~1 vectorized 16x16->32 multiply-accumulate per cycle
+# at ~4 GHz. Override per call when a measured peak is available.
+PEAK_LIMB_MULS_PER_S = 4e9
+GAMMA2_EXP_BITS = 20           # typical Gamma_2 exponent width (~log2 Delta)
+
+
+def limb_ops(ops: dict, key_bits: int,
+             exp_bits: int = GAMMA2_EXP_BITS) -> dict:
+    """16-bit limb-multiplications implied by an OpCounter ``ops`` dict.
+
+    ``ops`` is the RunReport ``"ops"`` section: ``{phase: {op: count}}``.
+    Ciphertexts live mod n^2, i.e. ``L = ceil(2*key_bits / 16)`` limbs.
+    Schoolbook costs per op:
+
+    * ``mulmod``  — one LxL product: ``L^2``;
+    * ``modexp``  — square-and-multiply over an ``exp_bits``-bit exponent:
+      ``~1.5 * exp_bits * L^2`` (squares always, multiplies half the time);
+    * ``enc``/``dec`` — one full-width exponentiation (r^n, resp. c^phi):
+      ``~1.5 * key_bits * L^2``.
+    """
+    L = max(1, -(-2 * key_bits // LIMB_BITS))
+    totals: dict[str, int] = {}
+    for per_phase in ops.values():
+        for op, n in per_phase.items():
+            totals[op] = totals.get(op, 0) + int(n)
+    per_op = {
+        "modexp": 1.5 * exp_bits * L * L,
+        "mulmod": float(L * L),
+        "enc": 1.5 * key_bits * L * L,
+        "dec": 1.5 * key_bits * L * L,
+    }
+    by_op = {op: totals.get(op, 0) * per_op[op]
+             for op in per_op if totals.get(op)}
+    return {"key_bits": key_bits, "limbs": L, "exp_bits": exp_bits,
+            "by_op": by_op, "limb_muls": sum(by_op.values())}
+
+
+def achieved_vs_peak(ops: dict, key_bits: int, seconds: float,
+                     peak: float = PEAK_LIMB_MULS_PER_S,
+                     exp_bits: int = GAMMA2_EXP_BITS) -> dict:
+    """Achieved limb-mul rate over ``seconds`` vs the assumed device peak.
+
+    ``seconds`` may be wall or virtual time — a RunReport built on the
+    simulated clock reports utilization *of the modeled device*, which is
+    the number the paper's speedup-ratio evaluation compares.
+    """
+    lo = limb_ops(ops, key_bits, exp_bits=exp_bits)
+    rate = lo["limb_muls"] / seconds if seconds > 0 else 0.0
+    lo.update(seconds=seconds, peak_limb_muls_per_s=peak,
+              limb_muls_per_s=rate,
+              fraction_of_peak=rate / peak if peak > 0 else 0.0)
+    return lo

@@ -444,4 +444,7 @@ def warmup(bk: BatchKey, shapes: Sequence,
             dec_vec(bk, ones, backend=backend)
             add_ct(bk, ones, ones, backend=backend)
             calls += 3
-    return {"calls": calls, "seconds": time.perf_counter() - t0}
+    out = {"calls": calls, "seconds": time.perf_counter() - t0}
+    from ..obs.metrics import record_profile
+    record_profile("warmup", **out)
+    return out

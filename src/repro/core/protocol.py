@@ -69,6 +69,7 @@ from . import bigint as bi
 from .cipher_tensor import CipherTensor
 from .quantization import QuantSpec, gamma1, gamma2, dequantize_theorem1
 from .. import workloads as workloads_mod
+from ..obs import metrics as obs_metrics
 
 
 # ---------------------------------------------------------------------------
@@ -281,18 +282,41 @@ class VecBox:
         return (self.key.n2.bit_length() + 7) // 8 * n_el
 
 
+# canonical protocol phase names — the OpCounter/RunReport vocabulary.
+# Drivers and instrumentation use these constants (not ad-hoc strings) so
+# per-phase accounting from both drivers lands under identical keys.
+PHASE_INIT = "init"
+PHASE_SHARE = "share"
+PHASE_ITERATE = "iterate"
+PHASES = (PHASE_INIT, PHASE_SHARE, PHASE_ITERATE)
+#: ops bumped before any driver set a phase land here — visible in the
+#: report instead of silently miscounted under "init" (the historical
+#: default), which polluted the init phase with e.g. calibration traffic.
+PHASE_UNSET = "unphased"
+
+
 class OpCounter:
-    """Per-phase crypto-op and traffic accounting."""
+    """Per-phase crypto-op and traffic accounting.
+
+    ``phase`` starts as ``None``: a ``bump`` before any phase is set is
+    accounted under :data:`PHASE_UNSET` rather than leaking into ``init``.
+    ``as_dict`` emits a stable key order — canonical :data:`PHASES` first
+    (those present), then any extra phases sorted, ops sorted within each
+    phase — so reports and conformance diffs are byte-stable.
+    """
 
     def __init__(self):
         self.counts: dict[str, dict[str, int]] = defaultdict(lambda: defaultdict(int))
-        self.phase = "init"
+        self.phase: str | None = None
 
     def bump(self, op: str, n: int = 1):
-        self.counts[self.phase][op] += n
+        self.counts[self.phase if self.phase is not None
+                    else PHASE_UNSET][op] += n
 
     def as_dict(self):
-        return {ph: dict(ops) for ph, ops in self.counts.items()}
+        order = [ph for ph in PHASES if ph in self.counts]
+        order += sorted(ph for ph in self.counts if ph not in PHASES)
+        return {ph: dict(sorted(self.counts[ph].items())) for ph in order}
 
 
 # ---------------------------------------------------------------------------
@@ -500,7 +524,7 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
     traffic = defaultdict(int)
 
     # --- Initialization phase -------------------------------------------
-    counter.phase = "init"
+    counter.phase = PHASE_INIT
     ys = y / K if cfg.y_scale == "consistent" else y
     st = wl.init_state(np.asarray(A, np.float64),
                        np.asarray(y, np.float64), ys, K,
@@ -532,7 +556,7 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
                               backend=cfg.kernel_backend)
 
     # --- Data security sharing phase -------------------------------------
-    counter.phase = "share"
+    counter.phase = PHASE_SHARE
     for k, edge in enumerate(edges):
         q_alpha = np.asarray(gamma1(u3s[k], spec))
         c_alpha = box.encrypt(q_alpha)
@@ -540,7 +564,7 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
         edge.store_shared(c_alpha)
 
     # --- Parallel privacy-computing phase ---------------------------------
-    counter.phase = "iterate"
+    counter.phase = PHASE_ITERATE
     history = np.zeros((cfg.iters, N_state))
     reshare_events = 0
 
@@ -586,10 +610,11 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
 
     if agg_ctx is not None:
         traffic["edge->master"] += agg_ctx.traffic_bytes
-    stats = {"ops": counter.as_dict(), "traffic_bytes": dict(traffic),
-             "key_bits": None if key is None else key.n.bit_length(),
-             "cipher": cfg.cipher, "workload": wl.name,
-             "reshare_events": reshare_events}
+    stats = obs_metrics.build_run_report(
+        driver="protocol", ops=counter.as_dict(), traffic=traffic,
+        key_bits=None if key is None else key.n.bit_length(),
+        cipher=cfg.cipher, workload=wl.name,
+        reshare_events=reshare_events, history=history)
     return ProtocolResult(x=st.x_prev, history=history, stats=stats,
                           stale_events=0)
 

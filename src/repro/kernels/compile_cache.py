@@ -61,3 +61,22 @@ def enable(path: str | None = None) -> str | None:
         return None
     _state["enabled"] = path
     return path
+
+
+def stats() -> dict:
+    """Cache-state snapshot for the RunReport profile section.
+
+    Counts on-disk executables in the persistent cache directory — an
+    approximation of hits (warm entries deserialized instead of lowered):
+    entries present before a run's compiles are hits-in-waiting, entries
+    added during it were misses.  Returns ``{"enabled", "dir", "entries"}``.
+    """
+    path = _state["enabled"]
+    entries = 0
+    if path and os.path.isdir(path):
+        try:
+            entries = sum(1 for name in os.listdir(path)
+                          if not name.startswith("."))
+        except OSError:
+            entries = 0
+    return {"enabled": path is not None, "dir": path, "entries": entries}

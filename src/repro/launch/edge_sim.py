@@ -28,6 +28,7 @@ from repro import workloads
 from repro.core import protocol
 from repro.core.quantization import QuantSpec
 from repro.data.synthetic import make_lasso
+from repro.obs import chrome_trace, trace as trace_mod
 from repro.runtime import LinkModel, topology as topo_mod
 from repro.runtime.runner import run_on_runtime
 
@@ -60,6 +61,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--calib-cache", default=None,
                     help="override the dispatch calibration cache path")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a chrome://tracing / Perfetto JSON trace "
+                         "(phase/launch/message/dispatch spans) plus the "
+                         "embedded RunReport; inspect with "
+                         "python -m repro.obs.report PATH")
     return ap
 
 
@@ -91,10 +97,12 @@ def main(argv=None) -> dict:
         deadline=args.deadline, latency_fn=latency_fn)
     link = LinkModel(bytes_per_s=args.bandwidth, latency_s=args.latency,
                      jitter_s=args.jitter, drop_prob=args.drop)
+    tracer = trace_mod.Tracer() if args.trace else trace_mod.NULL
     r = run_on_runtime(
         inst_A, inst_y, cfg, workload=wl,
         topology=topo_mod.make(args.topology, K),
-        link=link, mode=args.mode, calib_path=args.calib_cache)
+        link=link, mode=args.mode, calib_path=args.calib_cache,
+        trace=tracer)
 
     rstats = r.stats["runtime"]
     # row-split consensus stacks K full-width copies: fold to one model
@@ -119,6 +127,9 @@ def main(argv=None) -> dict:
         summary["workload_metrics"] = wl.metrics(winst, r.x)
     if "dispatch" in rstats:
         summary["dispatch_choices"] = rstats["dispatch"]
+    if args.trace:
+        chrome_trace.write(args.trace, tracer, run_report=r.stats)
+        summary["trace"] = {"path": args.trace, "spans": len(tracer.spans)}
     print(json.dumps(summary, indent=1))
     return summary
 

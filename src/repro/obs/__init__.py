@@ -1,0 +1,25 @@
+"""repro.obs — unified tracing, metrics, and profiling for the stack.
+
+* :mod:`repro.obs.trace` — span tracer (virtual clock + kernel wall
+  clock) with a no-op default so the untraced path stays overhead-free;
+* :mod:`repro.obs.chrome_trace` — ``chrome://tracing`` / Perfetto export;
+* :mod:`repro.obs.metrics` — counters/gauges/histograms and the
+  schema-versioned RunReport both protocol drivers emit;
+* :mod:`repro.obs.report` — ``python -m repro.obs.report run.json`` CLI
+  (summary + A/B diff).
+
+See docs/observability.md for the span categories, the RunReport schema,
+and worked examples.
+"""
+from .trace import NULL, CATEGORIES, NullTracer, Span, Tracer, as_tracer
+from .metrics import (REPORT_SCHEMA_VERSION, Histogram, Registry,
+                      build_run_report, diff_reports, mse_trajectory,
+                      profile_snapshot, record_profile, report_core,
+                      reports_equal_modulo_timing, summary)
+
+__all__ = [
+    "NULL", "CATEGORIES", "NullTracer", "Span", "Tracer", "as_tracer",
+    "REPORT_SCHEMA_VERSION", "Histogram", "Registry", "build_run_report",
+    "diff_reports", "mse_trajectory", "profile_snapshot", "record_profile",
+    "report_core", "reports_equal_modulo_timing", "summary",
+]

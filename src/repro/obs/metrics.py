@@ -1,0 +1,213 @@
+"""Per-run metrics registry and the schema-versioned ``RunReport``.
+
+This module owns the one stats schema both protocol drivers emit:
+``core.protocol.run_protocol`` and ``runtime.runner.run_on_runtime`` both
+build their ``ProtocolResult.stats`` through :func:`build_run_report`, so
+a sync-mode pair is identical in every *core* section (ops, bytes, MSE
+trajectory — pinned in tests/test_obs.py) and differs only in the timing
+/ runtime-telemetry sections that a virtual-clock simulation necessarily
+adds.
+
+Also here:
+
+* :func:`summary` / :class:`Histogram` — latency-distribution helpers
+  (p50/p95/p99) used by the coalescing queue's launch-wall telemetry and
+  ``benchmarks/common.timeit``;
+* the process-global profiling event log (:func:`record_profile`) that
+  ``paillier_batch.warmup``, ``dispatch.calibrate`` and the persistent
+  compile cache report into, folded into the report's ``runtime.profile``
+  section;
+* :func:`report_core` / :func:`reports_equal_modulo_timing` /
+  :func:`diff_reports` — the conformance and A/B-diff surface consumed by
+  ``python -m repro.obs.report``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+#: RunReport schema version — bump on any breaking change to the keys
+#: below; scripts/check_bench_schema.py validates emitted artifacts
+#: against it.
+REPORT_SCHEMA_VERSION = 1
+
+#: sections that must be identical between the two drivers in sync mode
+#: (everything else — "driver", "runtime" — is timing/telemetry)
+CORE_SECTIONS = ("schema_version", "workload", "cipher", "key_bits",
+                 "ops", "traffic_bytes", "reshare_events",
+                 "mse_trajectory")
+
+
+# ---------------------------------------------------------------------------
+# distribution helpers
+# ---------------------------------------------------------------------------
+
+def summary(values) -> dict:
+    """``{n, min, max, mean, p50, p95, p99}`` for a sample list."""
+    vals = np.asarray(list(values), dtype=np.float64)
+    if vals.size == 0:
+        return {"n": 0}
+    p50, p95, p99 = np.percentile(vals, (50, 95, 99))
+    return {"n": int(vals.size), "min": float(vals.min()),
+            "max": float(vals.max()), "mean": float(vals.mean()),
+            "p50": float(p50), "p95": float(p95), "p99": float(p99)}
+
+
+class Histogram:
+    """Append-only sample collector with a percentile summary."""
+
+    def __init__(self):
+        self.values: list[float] = []
+
+    def add(self, v: float) -> None:
+        self.values.append(float(v))
+
+    def summary(self) -> dict:
+        return summary(self.values)
+
+    def __len__(self) -> int:
+        return len(self.values)
+
+
+class Registry:
+    """Named counters / gauges / histograms for one run."""
+
+    def __init__(self):
+        self.counters: dict[str, int] = {}
+        self.gauges: dict[str, float] = {}
+        self.hists: dict[str, Histogram] = {}
+
+    def count(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def gauge(self, name: str, v: float) -> None:
+        self.gauges[name] = float(v)
+
+    def hist(self, name: str) -> Histogram:
+        return self.hists.setdefault(name, Histogram())
+
+    def snapshot(self) -> dict:
+        return {"counters": dict(sorted(self.counters.items())),
+                "gauges": dict(sorted(self.gauges.items())),
+                "histograms": {k: h.summary()
+                               for k, h in sorted(self.hists.items())}}
+
+
+# ---------------------------------------------------------------------------
+# process-global profiling events (warmup / calibration / compile cache)
+# ---------------------------------------------------------------------------
+
+_profile_events: list[dict] = []
+
+
+def record_profile(kind: str, **fields) -> None:
+    """Append one profiling event (jit warmup, calibration measurement,
+    compile-cache stats) to the process-global log.  Cheap: a dict append;
+    callers fire unconditionally so cold-vs-warm jit costs are visible in
+    every report."""
+    _profile_events.append({"kind": kind, **fields})
+
+
+def profile_snapshot(clear: bool = False) -> list[dict]:
+    """The profiling events recorded so far (optionally draining them)."""
+    out = [dict(e) for e in _profile_events]
+    if clear:
+        _profile_events.clear()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RunReport
+# ---------------------------------------------------------------------------
+
+def mse_trajectory(history: np.ndarray) -> list[float]:
+    """Per-round mean-square distance of the iterate to the run's final
+    iterate — the convergence curve the paper's MSE plots are built from,
+    computable without external ground truth and identical across drivers
+    whenever the histories are (the sync-mode conformance pin)."""
+    h = np.asarray(history, dtype=np.float64)
+    if h.ndim != 2 or h.shape[0] == 0:
+        return []
+    final = h[-1]
+    return [float(v) for v in np.mean((h - final[None, :]) ** 2, axis=1)]
+
+
+def build_run_report(*, driver: str, ops: dict, traffic: dict,
+                     key_bits: int | None, cipher: str, workload: str,
+                     reshare_events: int, history: np.ndarray,
+                     runtime: dict | None = None) -> dict:
+    """Assemble the schema-versioned stats dict for one protocol run.
+
+    ``ops`` is ``OpCounter.as_dict()`` (already in stable key order);
+    ``runtime`` is the runtime driver's telemetry section (virtual clock,
+    coalescing, dispatch, trace) and is omitted for the synchronous
+    reference driver.  The returned dict IS ``ProtocolResult.stats`` —
+    existing consumers keep reading ``stats["ops"]`` etc. unchanged.
+    """
+    report = {
+        "schema_version": REPORT_SCHEMA_VERSION,
+        "driver": driver,
+        "ops": ops,
+        "traffic_bytes": {k: int(v) for k, v in sorted(traffic.items())},
+        "key_bits": key_bits,
+        "cipher": cipher,
+        "workload": workload,
+        "reshare_events": int(reshare_events),
+        "mse_trajectory": mse_trajectory(history),
+    }
+    if runtime is not None:
+        report["runtime"] = runtime
+    return report
+
+
+def report_core(report: dict) -> dict:
+    """The driver-independent sections of a RunReport (conformance view)."""
+    return {k: report[k] for k in CORE_SECTIONS if k in report}
+
+
+def reports_equal_modulo_timing(a: dict, b: dict) -> bool:
+    """True when two RunReports agree on every core section — the
+    sync-mode conformance predicate (timing/telemetry sections ignored)."""
+    return report_core(a) == report_core(b)
+
+
+def diff_reports(a: dict, b: dict, label_a: str = "A",
+                 label_b: str = "B") -> list[str]:
+    """Human-readable core-section differences between two reports."""
+    lines = []
+    for key in CORE_SECTIONS:
+        va, vb = a.get(key), b.get(key)
+        if va == vb:
+            continue
+        if key == "mse_trajectory" and va and vb:
+            lines.append(f"mse_trajectory: final {label_a}={va[-1]:.3e} "
+                         f"{label_b}={vb[-1]:.3e} (len {len(va)}/{len(vb)})")
+        elif isinstance(va, dict) and isinstance(vb, dict):
+            for sub in sorted(set(va) | set(vb)):
+                if va.get(sub) != vb.get(sub):
+                    lines.append(f"{key}.{sub}: {label_a}={va.get(sub)} "
+                                 f"{label_b}={vb.get(sub)}")
+        else:
+            lines.append(f"{key}: {label_a}={va} {label_b}={vb}")
+    return lines
+
+
+def validate_report_core(report: dict, where: str = "report") -> list[str]:
+    """Schema errors (empty list = valid) for a RunReport / its core."""
+    errors = []
+    if not isinstance(report, dict):
+        return [f"{where}: not a dict"]
+    if report.get("schema_version") != REPORT_SCHEMA_VERSION:
+        errors.append(f"{where}: schema_version "
+                      f"{report.get('schema_version')!r} != "
+                      f"{REPORT_SCHEMA_VERSION}")
+    for key, typ in (("ops", dict), ("traffic_bytes", dict),
+                     ("mse_trajectory", list), ("workload", str),
+                     ("cipher", str)):
+        if not isinstance(report.get(key), typ):
+            errors.append(f"{where}: missing/ill-typed {key!r}")
+    if isinstance(report.get("ops"), dict):
+        for ph, ops in report["ops"].items():
+            if not isinstance(ops, dict) or not all(
+                    isinstance(v, int) for v in ops.values()):
+                errors.append(f"{where}: ops[{ph!r}] not a str->int dict")
+    return errors

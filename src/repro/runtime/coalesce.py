@@ -42,6 +42,7 @@ and launch counts change.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import numpy as np
@@ -52,6 +53,8 @@ from ..core import paillier_batch as pbatch
 from ..core import paillier_vec as pv
 from ..core.cipher_tensor import CipherTensor
 from ..kernels import ops
+from ..obs import metrics as obs_metrics
+from ..obs import trace as trace_mod
 from .scheduler import Scheduler
 
 _MATVEC_JIT: dict = {}
@@ -119,13 +122,15 @@ def _split(data, sizes):
 
 class CoalesceQueue:
     def __init__(self, sched: Scheduler, box, counter=None,
-                 tick_s: float = 1e-4, hold_ticks: int = 0):
+                 tick_s: float = 1e-4, hold_ticks: int = 0,
+                 tracer: "trace_mod.Tracer | trace_mod.NullTracer" = trace_mod.NULL):
         self.sched = sched
         self.box = box
         self.counter = counter if counter is not None \
             else getattr(box, "counter", None)
         self.tick_s = tick_s
         self.hold_ticks = hold_ticks   # max ticks a lone op waits for company
+        self.tracer = tracer
         self.pending: dict[tuple, list[_Entry]] = {}
         self._flush_posted = False
         self._horizon_posted = False   # a hold-horizon event is in flight
@@ -133,6 +138,13 @@ class CoalesceQueue:
         self.launches = 0          # batched box/kernel invocations
         self.coalesced_ops = 0     # ops that shared a launch with others
         self.held_flushes = 0      # flushes deferred waiting for company
+        # per-launch observability: coalesce width per launch (the
+        # ops-per-launch histogram) and host wall per launch split
+        # cold/warm — the first launch of an (op, element-shape) group
+        # pays any jit compile the warmup didn't cover
+        self.launch_widths: list[int] = []
+        self.launch_walls: dict[str, dict[str, list[float]]] = {}
+        self._warm_shapes: set[tuple] = set()
 
     # -- submission ------------------------------------------------------
     def submit(self, op: str, args: tuple, cb: Callable) -> None:
@@ -207,14 +219,56 @@ class CoalesceQueue:
                 (op != "matvec" or self._matvec_fuses(entries))
             if not fused:
                 for e in entries:
-                    e.cb(self._run_one(op, e.args))
+                    t0 = time.perf_counter()
+                    res = self._run_one(op, e.args)
+                    self._observe_launch(op, shape, [e],
+                                         (time.perf_counter() - t0) * 1e3,
+                                         fused=False)
                     self.launches += 1
+                    e.cb(res)
                 continue
             self.coalesced_ops += len(entries)
             self.launches += 1
-            for e, res in zip(entries, self._run_group(op, entries)):
+            t0 = time.perf_counter()
+            results = self._run_group(op, entries)
+            self._observe_launch(op, shape, entries,
+                                 (time.perf_counter() - t0) * 1e3, fused=True)
+            for e, res in zip(entries, results):
                 e.cb(res)
         # callbacks may have queued follow-up ops for the next tick
+
+    def _observe_launch(self, op: str, shape: tuple, entries: list[_Entry],
+                        wall_ms: float, fused: bool) -> None:
+        """Record one executed launch: width, cold/warm wall, spans."""
+        width = len(entries)
+        self.launch_widths.append(width)
+        kind = "cold" if (op, shape) not in self._warm_shapes else "warm"
+        self._warm_shapes.add((op, shape))
+        walls = self.launch_walls.setdefault(op, {"cold": [], "warm": []})
+        walls[kind].append(wall_ms)
+        if self.tracer.enabled:
+            self.tracer.add(
+                f"launch:{op}", "launch", t=self.sched.now, wall_ms=wall_ms,
+                op=op, shape=shape, width=width, fused=fused, jit=kind,
+                backend=getattr(self.box, "name", "?"),
+                phase=entries[0].phase)
+            for e in entries:
+                self.tracer.add(op, "crypto_op", t=self.sched.now,
+                                op=op, shape=shape, phase=e.phase,
+                                coalesced=fused)
+
+    def metrics_section(self) -> dict:
+        """Coalescing telemetry for the RunReport ``runtime`` section."""
+        return {
+            "launches": self.launches,
+            "coalesced_ops": self.coalesced_ops,
+            "held_flushes": self.held_flushes,
+            "ops_per_launch": obs_metrics.summary(self.launch_widths),
+            "launch_wall_ms": {
+                op: {k: obs_metrics.summary(v)
+                     for k, v in walls.items() if v}
+                for op, walls in sorted(self.launch_walls.items())},
+        }
 
     def _run_one(self, op: str, args: tuple):
         if op == "enc":

@@ -44,6 +44,8 @@ from ..core import cipher_tensor as ct_mod
 from ..core import paillier as gold
 from ..core import paillier_batch as pb
 from ..core.quantization import QuantSpec
+from ..obs import trace as trace_mod
+from ..obs.metrics import record_profile
 
 TABLE_VERSION = 3   # v3: entries keyed by device kind (cpu/gpu/tpu) so one
                     # cache file holds per-device grids, and the batched
@@ -188,6 +190,8 @@ def calibrate(key_bits=(128,), batch_sizes=(8, 64),
                         for v in loaded["entries"].values())):
             table = loaded
     dirty = False
+    t0 = time.perf_counter()
+    n_measured = n_cached = 0
     for backend in backends:
         for bits in key_bits:
             b = 0 if backend == "plain" else bits
@@ -197,6 +201,11 @@ def calibrate(key_bits=(128,), batch_sizes=(8, 64),
                     table["entries"][k] = _measure_backend(
                         backend, b, batch, mat_rows, seed)
                     dirty = True
+                    n_measured += 1
+                else:
+                    n_cached += 1
+    record_profile("calibrate", measured=n_measured, cached=n_cached,
+                   seconds=time.perf_counter() - t0, device=device_kind())
     if dirty:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
         tmp = path + ".tmp"
@@ -322,6 +331,10 @@ class AdaptiveBox:
         }
         self.vec = self.boxes["vec"]
         self.choices: Counter = Counter()
+        # observability: the runner wires a tracer + virtual clock in so
+        # every routing decision becomes a "dispatch" span
+        self.tracer: "trace_mod.Tracer | trace_mod.NullTracer" = trace_mod.NULL
+        self.clock = None   # callable -> virtual seconds (else wall 0.0)
 
     # -- routing ---------------------------------------------------------
     def _entry(self, backend: str, batch: int) -> dict:
@@ -349,6 +362,10 @@ class AdaptiveBox:
                            f"(run dispatch.calibrate first)")
         pick = min(costs, key=costs.get)
         self.choices[(op, pick)] += 1
+        if self.tracer.enabled:
+            self.tracer.add(f"dispatch:{op}", "dispatch",
+                            t=self.clock() if self.clock else 0.0,
+                            op=op, backend=pick, n_el=n_el)
         return pick
 
     def _coerce(self, c: ACipher, rep: str) -> object:

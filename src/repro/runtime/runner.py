@@ -48,9 +48,13 @@ from functools import partial
 
 import numpy as np
 
+from ..analysis import roofline
 from ..core import paillier as gold
 from ..core import protocol
 from ..core.quantization import gamma1, gamma2, dequantize_theorem1
+from ..kernels import compile_cache
+from ..obs import metrics as obs_metrics
+from ..obs import trace as trace_mod
 from . import dispatch
 from .coalesce import CoalesceQueue
 from .scheduler import Scheduler
@@ -162,7 +166,8 @@ class MasterActor:
     # -- Initialization phase -------------------------------------------
     def start(self) -> None:
         rt, cfg = self.rt, self.rt.cfg
-        rt.counter.phase = "init"
+        rt.counter.phase = protocol.PHASE_INIT
+        self._phase_t0 = rt.sched.now
         if cfg.iters == 0:
             self.done = True
             return
@@ -188,7 +193,12 @@ class MasterActor:
         elif msg.tag == "share_ok":
             self._n_share += 1
             if self._n_share == self.rt.cfg.K:
-                self.rt.counter.phase = "iterate"
+                rt = self.rt
+                if rt.tracer.enabled:
+                    rt.tracer.add("phase:share", "phase", t=self._phase_t0,
+                                  dur=rt.sched.now - self._phase_t0)
+                self._phase_t0 = rt.sched.now
+                rt.counter.phase = protocol.PHASE_ITERATE
                 self._iterate(0)
         elif msg.tag == "xhat":
             self._on_xhat(*msg.payload)
@@ -200,7 +210,11 @@ class MasterActor:
     # -- Data security sharing phase -------------------------------------
     def _share(self) -> None:
         rt = self.rt
-        rt.counter.phase = "share"
+        if rt.tracer.enabled:
+            rt.tracer.add("phase:init", "phase", t=self._phase_t0,
+                          dur=rt.sched.now - self._phase_t0)
+        self._phase_t0 = rt.sched.now
+        rt.counter.phase = protocol.PHASE_SHARE
         for k in range(rt.cfg.K):
             q_alpha = np.asarray(gamma1(self.u3s[k], rt.cfg.spec))
             rt.cq.submit("enc", (q_alpha,), partial(self._share_ready, k))
@@ -242,6 +256,9 @@ class MasterActor:
                 rt.cq.submit("enc", (q_alpha,),
                              partial(self._reshare_ready, k, t))
                 self.reshare_events += 1
+                if rt.tracer.enabled:
+                    rt.tracer.add("reshare", "reshare", t=rt.sched.now,
+                                  edge=k, round=t)
         for k in range(cfg.K):
             u1, u2 = self.wl.iter_inputs(self.wst, k)
             self.w_cur[k] = float(np.sum(u1 + u2))
@@ -328,21 +345,31 @@ class MasterActor:
         self._n_dec += 1
         if self._n_dec < cfg.K:
             return
+        if self.wl.uses_secure_agg and rt.tracer.enabled:
+            # the z-update aggregate of this round goes through secure
+            # aggregation inside global_update below
+            rt.tracer.add("secure_agg", "agg", t=rt.sched.now, round=self.t)
         # master updates (10b)/(10c) with the (t-1) iterate — Jacobi order
         self.wl.global_update(self.wst, self._x_new)
         self.history[self.t] = self._x_new
         self.iter_times.append(rt.sched.now)
+        if rt.tracer.enabled:
+            rt.tracer.add(f"round:{self.t}", "phase", t=self.iter_start,
+                          dur=rt.sched.now - self.iter_start, round=self.t)
         if self.t + 1 < cfg.iters:
             self._iterate(self.t + 1)
         else:
             self.done = True
+            if rt.tracer.enabled:
+                rt.tracer.add("phase:iterate", "phase", t=self._phase_t0,
+                              dur=rt.sched.now - self._phase_t0)
 
 
 class _Runtime:
     """Wiring bag shared by the actors (scheduler, transport, crypto)."""
 
     def __init__(self, sched, transport, cq, box, key, counter, cfg, nk,
-                 mode, cost, stale_limit):
+                 mode, cost, stale_limit, tracer=trace_mod.NULL):
         self.sched = sched
         self.transport = transport
         self.cq = cq
@@ -354,6 +381,7 @@ class _Runtime:
         self.mode = mode
         self.cost = cost
         self.stale_limit = stale_limit
+        self.tracer = tracer
 
 
 def auto_hold_ticks(topo: Topology, transport: Transport, tick_s: float,
@@ -394,12 +422,23 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
                    table: dict | None = None,
                    calib_path: str | None = None,
                    coalesce_hold_ticks: "int | str" = 0,
-                   trace: bool = False) -> "protocol.ProtocolResult":
+                   trace: "bool | trace_mod.Tracer" = False,
+                   ) -> "protocol.ProtocolResult":
     """Run 3P-ADMM-PC2 on the simulated edge network; see module docstring.
 
-    Returns a ``ProtocolResult`` whose ``stats`` carry the usual op/traffic
-    counters plus a ``"runtime"`` section (virtual clock, per-iteration
-    completion times, per-link bytes, coalescing and dispatch telemetry).
+    Returns a ``ProtocolResult`` whose ``stats`` is a schema-versioned
+    :func:`repro.obs.metrics.build_run_report` RunReport: the usual
+    op/traffic counters plus a ``"runtime"`` section (virtual clock,
+    per-iteration completion times, per-link bytes, coalescing/dispatch
+    telemetry, limb-op roofline).  In sync mode the report's core
+    sections are identical to ``run_protocol``'s (conformance-tested).
+
+    ``trace`` may be ``True`` (allocate a fresh span tracer) or a
+    :class:`repro.obs.trace.Tracer` to fill — spans cover phases, rounds,
+    kernel launches, crypto ops, messages, dispatch decisions, re-shares
+    and secure aggregation; the timing-free signature lands in
+    ``stats["runtime"]["trace"]`` and the tracer itself (exportable via
+    ``repro.obs.chrome_trace``) is whatever object you passed in.
 
     ``workload`` selects the ADMM problem family (``repro.workloads``);
     ``None`` resolves ``cfg.workload`` from the registry (default: the
@@ -441,15 +480,20 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     topo = topology or star(K)
     if topo.n_edges != K:
         raise ValueError(f"topology has {topo.n_edges} edges, cfg.K={K}")
-    sched = Scheduler(seed=cfg.seed, trace=trace)
-    transport = Transport(sched, topo, default=link, per_link=per_link)
+    tracer = trace_mod.as_tracer(trace)
+    sched = Scheduler(seed=cfg.seed)
+    transport = Transport(sched, topo, default=link, per_link=per_link,
+                          tracer=tracer)
     if coalesce_hold_ticks == "auto":
         coalesce_hold_ticks = auto_hold_ticks(topo, transport, tick_s)
     cq = CoalesceQueue(sched, box, counter=counter, tick_s=tick_s,
-                       hold_ticks=coalesce_hold_ticks)
+                       hold_ticks=coalesce_hold_ticks, tracer=tracer)
+    if isinstance(box, dispatch.AdaptiveBox):
+        box.tracer = tracer
+        box.clock = lambda: sched.now
     cost = cost_model or dispatch.CostModel()
     rt = _Runtime(sched, transport, cq, box, key, counter, cfg, nk, mode,
-                  cost, stale_limit)
+                  cost, stale_limit, tracer=tracer)
 
     master = MasterActor(rt, np.asarray(A, np.float64),
                          np.asarray(y, np.float64), wl)
@@ -471,33 +515,47 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     if master.agg_ctx is not None:
         traffic["edge->master"] = traffic.get("edge->master", 0) \
             + master.agg_ctx.traffic_bytes
-    stats = {
-        "ops": counter.as_dict(),
-        "traffic_bytes": traffic,
-        "key_bits": None if key is None else key.n.bit_length(),
-        "cipher": cfg.cipher,
-        "workload": wl.name,
-        "reshare_events": master.reshare_events,
-        "runtime": {
-            "topology": topo.kind,
-            "mode": mode,
-            "coalesce_hold_ticks": cq.hold_ticks,
-            "virtual_time": sched.now,
-            "iter_times": list(master.iter_times),
-            "events": sched.events_run,
-            "link_bytes": {f"{u}->{v}": n
-                           for (u, v), n in sorted(transport.link_bytes.items())},
-            "retransmits": transport.retransmits,
-            "coalesced_ops": cq.coalesced_ops,
-            "launches": cq.launches,
-            "held_flushes": cq.held_flushes,
-        },
+    key_bits = None if key is None else key.n.bit_length()
+    ops = counter.as_dict()
+    runtime = {
+        "topology": topo.kind,
+        "mode": mode,
+        "coalesce_hold_ticks": cq.hold_ticks,
+        "virtual_time": sched.now,
+        "iter_times": list(master.iter_times),
+        "events": sched.events_run,
+        "max_queue_depth": sched.max_depth,
+        "link_bytes": {f"{u}->{v}": n
+                       for (u, v), n in sorted(transport.link_bytes.items())},
+        "retransmits": transport.retransmits,
+        # flat launch counters kept for existing consumers; "coalesce"
+        # carries the full telemetry (widths, cold/warm launch walls)
+        "coalesced_ops": cq.coalesced_ops,
+        "launches": cq.launches,
+        "held_flushes": cq.held_flushes,
+        "coalesce": cq.metrics_section(),
+        # process-level profiling since the previous report (warmup,
+        # calibration, compile-cache state)
+        "profile": obs_metrics.profile_snapshot(clear=True),
+        "compile_cache": compile_cache.stats(),
     }
+    if key_bits is not None:
+        # achieved-vs-peak limb-ops on the virtual clock: utilization of
+        # the MODELED device (the paper's speedup-ratio denominator)
+        runtime["roofline"] = roofline.achieved_vs_peak(
+            ops, key_bits, sched.now)
     if isinstance(box, dispatch.AdaptiveBox):
-        stats["runtime"]["dispatch"] = {
+        runtime["dispatch"] = {
             f"{op}:{b}": n for (op, b), n in sorted(box.choices.items())}
-    if trace:
-        stats["runtime"]["trace"] = list(sched.trace)
+    if tracer.enabled:
+        # timing-free structured span signature — byte-identical across
+        # seeded runs (the determinism pin in tests/test_runtime.py)
+        runtime["trace"] = tracer.signature()
+    stats = obs_metrics.build_run_report(
+        driver="runtime", ops=ops, traffic=traffic, key_bits=key_bits,
+        cipher=cfg.cipher, workload=wl.name,
+        reshare_events=master.reshare_events, history=master.history,
+        runtime=runtime)
     return protocol.ProtocolResult(
         x=master.wst.x_prev, history=master.history, stats=stats,
         stale_events=master.stale_events)

@@ -26,12 +26,15 @@ class Scheduler:
         self._heap: list[tuple[float, int, str, Callable[[], None]]] = []
         self._seq = 0
         self.events_run = 0
+        self.max_depth = 0      # peak event-queue depth (obs telemetry)
         self.trace: list[tuple[float, str]] | None = [] if trace else None
 
     def at(self, time: float, fn: Callable[[], None], label: str = "") -> None:
         """Post ``fn`` to run at virtual ``time`` (clamped to now)."""
         heapq.heappush(self._heap, (max(time, self.now), self._seq, label, fn))
         self._seq += 1
+        if len(self._heap) > self.max_depth:
+            self.max_depth = len(self._heap)
 
     def after(self, delay: float, fn: Callable[[], None],
               label: str = "") -> None:

@@ -23,6 +23,7 @@ import dataclasses
 from collections import defaultdict
 from typing import Callable
 
+from ..obs import trace as trace_mod
 from .scheduler import Scheduler
 from .topology import Topology
 
@@ -55,9 +56,11 @@ def _role(node: str) -> str:
 class Transport:
     def __init__(self, sched: Scheduler, topo: Topology,
                  default: LinkModel | None = None,
-                 per_link: dict | None = None):
+                 per_link: dict | None = None,
+                 tracer: "trace_mod.Tracer | trace_mod.NullTracer" = trace_mod.NULL):
         self.sched = sched
         self.topo = topo
+        self.tracer = tracer
         self.default = default or LinkModel()
         self.per_link = {frozenset(k): v for k, v in (per_link or {}).items()}
         self.handlers: dict[str, Callable[[Message], None]] = {}
@@ -102,6 +105,12 @@ class Transport:
                 self.link_bytes[hop] += nbytes
         if nbytes:
             self.traffic[f"{_role(src)}->{_role(dst)}"] += nbytes
+        if self.tracer.enabled:
+            # message span: virtual send time -> delivery (dur = modeled
+            # latency + serialization + jitter + retransmit backoffs)
+            self.tracer.add(tag, "message", t=self.sched.now, dur=delay,
+                            src=src, dst=dst, bytes=nbytes,
+                            hops=len(path) - 1)
         msg = Message(src=src, dst=dst, tag=tag, payload=payload,
                       nbytes=nbytes)
         handler = self.handlers[dst]

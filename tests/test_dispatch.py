@@ -281,8 +281,10 @@ def test_coalesce_plain_equivalent_to_direct():
     assert cq.launches == 1 and cq.coalesced_ops == 5
     for i, m in enumerate(ms):
         assert np.array_equal(got[i], box.encrypt(m))
-    # counter totals equal the per-op sum (5 batched + 5 direct)
-    assert box.counter.counts["init"]["enc"] == 80
+    # counter totals equal the per-op sum (5 batched + 5 direct); no
+    # phase was ever set, so the bumps land in the unphased bucket
+    # instead of leaking into "init"
+    assert box.counter.counts[protocol.PHASE_UNSET]["enc"] == 80
 
 
 def test_coalesce_gold_add_and_dec_groups():

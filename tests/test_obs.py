@@ -1,0 +1,291 @@
+"""repro.obs: RunReport conformance, span tracing, export, schema lint.
+
+The load-bearing pin: both protocol drivers now build their stats through
+``obs.metrics.build_run_report``, so a sync-mode pair must be EQUAL
+MODULO TIMING — identical core sections (ops, traffic bytes, reshare
+events, MSE trajectory) for every registered workload family on both the
+plain and the gold cipher arm.  Everything else here covers the tracer
+(span categories, determinism signature, zero-overhead null path), the
+chrome-trace export + ``python -m repro.obs.report`` CLI, the OpCounter
+phase-constant fixes, the ``timeit`` distribution upgrade, and the
+``scripts/check_bench_schema`` artifact lint.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import BENCH_SCHEMA_VERSION, TimingResult, timeit
+from repro import workloads
+from repro.core import protocol
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import make_lasso
+from repro.obs import chrome_trace, metrics, report as report_cli
+from repro.obs import trace as trace_mod
+from repro.runtime.runner import run_on_runtime
+from scripts import check_bench_schema
+
+SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+K, N, ITERS, KEY_BITS = 4, 32, 2, 128
+WORKLOADS = ("lasso", "ridge", "logistic", "elastic_net", "power_grid",
+             "consensus_lasso", "consensus_logistic", "streaming_lasso")
+ROW_SPLIT = {"consensus_lasso", "consensus_logistic"}
+
+
+def _case(name):
+    """(workload, instance, spec, cfg overrides) — mirrors
+    tests/test_conformance.py's setup so the same runs are compared."""
+    if name == "lasso":
+        return None, make_lasso(24, N, sparsity=0.1, noise=0.01,
+                                seed=1), SPEC, {}
+    wl = workloads.get_default(name)
+    n = N // K if name in ROW_SPLIT else N
+    winst = wl.make_instance(24, n, K, seed=1)
+    spec = wl.calibrate_spec(winst.A, winst.y, K, ITERS)
+    return wl, winst, spec, {"rho": wl.rho, "lam": wl.lam}
+
+
+def _pair(name, cipher):
+    wl, winst, spec, over = _case(name)
+    kw = dict(K=K, lam=0.05, iters=ITERS, spec=spec, seed=0,
+              key_bits=KEY_BITS, cipher=cipher, workload=name)
+    kw.update(over)
+    cfg = protocol.ProtocolConfig(**kw)
+    rp = protocol.run_protocol(winst.A, winst.y, cfg, workload=wl)
+    rr = run_on_runtime(winst.A, winst.y, cfg, workload=wl)
+    return rp, rr
+
+
+# ---------------------------------------------------------------------------
+# RunReport conformance: both drivers, all families, plain + gold
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", WORKLOADS)
+@pytest.mark.parametrize("cipher", ("plain", "gold"))
+def test_sync_run_reports_equal_modulo_timing(name, cipher):
+    rp, rr = _pair(name, cipher)
+    assert metrics.reports_equal_modulo_timing(rp.stats, rr.stats), \
+        metrics.diff_reports(rp.stats, rr.stats, "protocol", "runtime")
+    # and each is schema-valid with the right driver/runtime split
+    assert metrics.validate_report_core(rp.stats) == []
+    assert metrics.validate_report_core(rr.stats) == []
+    assert rp.stats["driver"] == "protocol" and "runtime" not in rp.stats
+    assert rr.stats["driver"] == "runtime" and "runtime" in rr.stats
+    # the MSE trajectory is the shared convergence curve, ending at zero
+    # (distance to the run's own final iterate)
+    mse = rp.stats["mse_trajectory"]
+    assert len(mse) == ITERS and mse[-1] == 0.0
+
+
+def test_reshare_spans_match_reshare_events():
+    """A streaming run's report records exactly ``reshare_events``
+    re-share spans (and they all land in the iterate rounds)."""
+    wl, winst, spec, over = _case("streaming_lasso")
+    kw = dict(K=K, lam=0.05, iters=6, spec=spec, seed=0, cipher="plain",
+              workload="streaming_lasso")
+    kw.update(over)
+    cfg = protocol.ProtocolConfig(**kw)
+    tracer = trace_mod.Tracer()
+    r = run_on_runtime(winst.A, winst.y, cfg, workload=wl, trace=tracer)
+    assert r.stats["reshare_events"] > 0
+    assert tracer.count("reshare") == r.stats["reshare_events"]
+    sig_spans = [e for e in r.stats["runtime"]["trace"]
+                 if e[1] == "reshare"]
+    assert len(sig_spans) == r.stats["reshare_events"]
+
+
+def test_secure_agg_rounds_traced():
+    wl, winst, spec, over = _case("consensus_lasso")
+    kw = dict(K=K, lam=0.05, iters=ITERS, spec=spec, seed=0,
+              cipher="plain", workload="consensus_lasso")
+    kw.update(over)
+    cfg = protocol.ProtocolConfig(**kw)
+    tracer = trace_mod.Tracer()
+    run_on_runtime(winst.A, winst.y, cfg, workload=wl, trace=tracer)
+    assert tracer.count("agg") == ITERS        # one aggregate per round
+
+
+# ---------------------------------------------------------------------------
+# tracer mechanics
+# ---------------------------------------------------------------------------
+
+def test_tracer_signature_excludes_wall_clock_only():
+    a, b = trace_mod.Tracer(), trace_mod.Tracer()
+    a.add("launch:enc", "launch", t=1.0, wall_ms=0.123, op="enc")
+    b.add("launch:enc", "launch", t=1.0, wall_ms=9.876, op="enc")
+    assert a.signature() == b.signature()
+    b.add("x", "phase", t=2.0)
+    assert a.signature() != b.signature()
+    with pytest.raises(ValueError, match="category"):
+        a.add("bad", "not-a-cat", t=0.0)
+
+
+def test_null_tracer_is_default_and_inert():
+    assert trace_mod.as_tracer(False) is trace_mod.NULL
+    assert trace_mod.as_tracer(None) is trace_mod.NULL
+    assert not trace_mod.NULL.enabled
+    trace_mod.NULL.add("x", "phase", t=0.0)    # no-op, no error
+    assert trace_mod.NULL.signature() == []
+    t = trace_mod.Tracer()
+    assert trace_mod.as_tracer(t) is t
+    assert isinstance(trace_mod.as_tracer(True), trace_mod.Tracer)
+    # untraced runs carry no trace key at all
+    inst = make_lasso(12, 8, sparsity=0.2, noise=0.01, seed=0)
+    cfg = protocol.ProtocolConfig(K=4, lam=0.05, iters=2, spec=SPEC,
+                                  cipher="plain", seed=0)
+    r = run_on_runtime(inst.A, inst.y, cfg)
+    assert "trace" not in r.stats["runtime"]
+
+
+# ---------------------------------------------------------------------------
+# chrome-trace export + report CLI
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_run(tmp_path_factory):
+    inst = make_lasso(12, 8, sparsity=0.2, noise=0.01, seed=0)
+    cfg = protocol.ProtocolConfig(K=4, lam=0.05, iters=3, spec=SPEC,
+                                  cipher="plain", seed=0)
+    tracer = trace_mod.Tracer()
+    r = run_on_runtime(inst.A, inst.y, cfg, trace=tracer)
+    path = tmp_path_factory.mktemp("obs") / "run.trace.json"
+    chrome_trace.write(str(path), tracer, run_report=r.stats)
+    return r, tracer, path
+
+
+def test_chrome_trace_exports_loadable_doc(traced_run):
+    r, tracer, path = traced_run
+    doc = chrome_trace.load(str(path))
+    assert chrome_trace.validate(doc, str(path)) == []
+    events = doc["traceEvents"]
+    x_events = [e for e in events if e.get("ph") == "X"]
+    assert len(x_events) == len(tracer.spans)
+    assert all(e["ts"] >= 0 and e["dur"] > 0 for e in x_events)
+    # lane metadata present for every category in use
+    lanes = {e["args"]["name"] for e in events
+             if e.get("ph") == "M" and e.get("name") == "thread_name"}
+    assert {s.cat for s in tracer.spans} <= lanes
+    # lossless span list + embedded report round-trip
+    spans = chrome_trace.load_spans(doc)
+    assert len(spans) == len(tracer.spans)
+    assert doc["runReport"]["workload"] == r.stats["workload"]
+    assert metrics.validate_report_core(doc["runReport"]) == []
+
+
+def test_report_cli_summary_and_diff(traced_run, tmp_path, capsys):
+    _, _, path = traced_run
+    assert report_cli.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    for needle in ("workload=lasso", "phase", "coalesce:", "top spans:"):
+        assert needle in out
+    other = tmp_path / "b.trace.json"
+    other.write_text(path.read_text())
+    assert report_cli.main([str(path), str(other)]) == 0
+    out = capsys.readouterr().out
+    assert "equal modulo timing" in out
+
+
+# ---------------------------------------------------------------------------
+# OpCounter phase constants
+# ---------------------------------------------------------------------------
+
+def test_opcounter_unphased_bumps_are_not_miscounted():
+    c = protocol.OpCounter()
+    c.bump("enc", 2)                     # before any phase is set
+    c.phase = protocol.PHASE_INIT
+    c.bump("enc")
+    d = c.as_dict()
+    assert d[protocol.PHASE_UNSET] == {"enc": 2}
+    assert d[protocol.PHASE_INIT] == {"enc": 1}
+
+
+def test_opcounter_stable_key_order():
+    c = protocol.OpCounter()
+    for ph in (protocol.PHASE_ITERATE, "custom", protocol.PHASE_INIT):
+        c.phase = ph
+        c.bump("zop")
+        c.bump("aop")
+    keys = list(c.as_dict())
+    assert keys == [protocol.PHASE_INIT, protocol.PHASE_ITERATE, "custom"]
+    assert list(c.as_dict()[protocol.PHASE_INIT]) == ["aop", "zop"]
+    assert protocol.PHASES == (protocol.PHASE_INIT, protocol.PHASE_SHARE,
+                               protocol.PHASE_ITERATE)
+
+
+# ---------------------------------------------------------------------------
+# timing + metrics helpers
+# ---------------------------------------------------------------------------
+
+def test_timeit_returns_distribution_backward_compatible():
+    calls = []
+    t = timeit(lambda: calls.append(1), repeat=5, warmup=2)
+    assert len(calls) == 7
+    assert isinstance(t, TimingResult) and isinstance(t, float)
+    assert float(t) == t.p50 and t.n == 5
+    d = t.as_dict()
+    assert set(d) == {"p50", "p95", "min", "mean", "n", "samples"}
+    assert d["min"] <= d["p50"] <= d["p95"]
+    assert 2.0 / t > 0                   # arithmetic still works
+
+
+def test_metrics_summary_and_registry():
+    s = metrics.summary(range(1, 101))
+    assert s["n"] == 100 and s["min"] == 1 and s["max"] == 100
+    assert s["p50"] == pytest.approx(50.5)
+    assert s["p95"] == pytest.approx(95.05)
+    assert metrics.summary([]) == {"n": 0}
+    reg = metrics.Registry()
+    reg.count("launches", 3)
+    reg.gauge("depth", 7)
+    reg.hist("wall").add(1.0)
+    snap = reg.snapshot()
+    assert snap["counters"] == {"launches": 3}
+    assert snap["gauges"] == {"depth": 7.0}
+    assert snap["histograms"]["wall"]["n"] == 1
+
+
+def test_mse_trajectory_matches_history():
+    h = np.array([[2.0, 0.0], [1.0, 1.0], [1.0, 0.0]])
+    traj = metrics.mse_trajectory(h)
+    assert traj == [pytest.approx(0.5), pytest.approx(0.5), 0.0]
+    assert metrics.mse_trajectory(np.zeros((0, 4))) == []
+
+
+# ---------------------------------------------------------------------------
+# schema checker
+# ---------------------------------------------------------------------------
+
+def test_check_bench_schema_accepts_and_rejects(tmp_path, traced_run):
+    _, _, trace_path = traced_run
+    good = tmp_path / "BENCH_x.json"
+    rp, _ = _pair("lasso", "plain")
+    good.write_text(json.dumps({
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "rows": [{"report": metrics.report_core(rp.stats)}]}))
+    assert check_bench_schema.check_path(good) == []
+    assert check_bench_schema.check_path(pathlib.Path(trace_path)) == []
+
+    stale = tmp_path / "BENCH_stale.json"
+    stale.write_text(json.dumps({"results": []}))
+    assert any("schema_version" in e
+               for e in check_bench_schema.check_path(stale))
+
+    broken = json.loads(good.read_text())
+    broken["rows"][0]["report"]["ops"] = "nope"
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text(json.dumps(broken))
+    assert any("ops" in e for e in check_bench_schema.check_path(bad))
+
+    bad_trace = tmp_path / "t.trace.json"
+    doc = json.loads(pathlib.Path(trace_path).read_text())
+    doc["traceEvents"].append({"ph": "X", "name": "x", "cat": "bogus",
+                               "ts": 0, "dur": 1, "pid": 1, "tid": 1})
+    bad_trace.write_text(json.dumps(doc))
+    assert any("bogus" in e
+               for e in check_bench_schema.check_path(bad_trace))

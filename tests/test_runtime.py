@@ -69,8 +69,14 @@ def test_topology_validation():
 # ---------------------------------------------------------------------------
 
 def test_scheduler_deterministic_event_order(inst):
-    """Same seed => identical event trace and results, even with jitter,
-    losses and an uneven topology in play."""
+    """Same seed => byte-identical structured span stream and results,
+    even with jitter, losses and an uneven topology in play.
+
+    ``stats["runtime"]["trace"]`` is the tracer's timing-free signature
+    (repro.obs.trace): virtual-clock fields stay in — the scheduler's rng
+    is seeded, so they must replay — and only host wall-clock is excluded.
+    """
+    from repro.obs.trace import CATEGORIES
     link = LinkModel(jitter_s=2e-3, drop_prob=0.05, timeout_s=5e-3)
     runs = [run_on_runtime(inst.A, inst.y, _cfg(iters=4),
                            topology=topology.hierarchical(3, fanout=2),
@@ -79,6 +85,9 @@ def test_scheduler_deterministic_event_order(inst):
     t1 = runs[1].stats["runtime"]["trace"]
     assert t0 == t1
     assert len(t0) > 50
+    cats = {entry[1] for entry in t0}
+    assert cats <= set(CATEGORIES)
+    assert {"phase", "launch", "message", "crypto_op"} <= cats
     assert np.array_equal(runs[0].history, runs[1].history)
     assert runs[0].stats["runtime"]["retransmits"] == \
         runs[1].stats["runtime"]["retransmits"] > 0
@@ -367,9 +376,10 @@ def test_streaming_reshare_is_zero_extra_launches():
 
 def test_streaming_reshare_deterministic_under_latency_trace():
     """Fixed heterogeneous latency trace + coalesce_hold_ticks='auto':
-    two identical streaming runs replay the exact same launch/coalesce
-    telemetry and trajectory (re-shares do not perturb the deterministic
-    event order)."""
+    two identical streaming runs replay the exact same structured span
+    stream (timing-free signature) and trajectory — re-shares do not
+    perturb the deterministic event order, and every re-share emits its
+    own "reshare" span."""
     wl, winst = _streaming_pair(segments=3)
     cfg = protocol.ProtocolConfig(K=3, lam=0.05, iters=6, spec=SPEC,
                                   cipher="plain", seed=0,
@@ -381,6 +391,8 @@ def test_streaming_reshare_deterministic_under_latency_trace():
     r0, r1 = (r.stats["runtime"] for r in runs)
     assert r0["coalesce_hold_ticks"] > 0             # spread detected
     assert r0["trace"] == r1["trace"]
+    reshare_spans = [e for e in r0["trace"] if e[1] == "reshare"]
+    assert len(reshare_spans) == runs[0].stats["reshare_events"] > 0
     for key in ("launches", "coalesced_ops", "held_flushes"):
         assert r0[key] == r1[key], key
     assert np.array_equal(runs[0].history, runs[1].history)
