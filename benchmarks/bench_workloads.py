@@ -24,6 +24,11 @@ mid-run; ``reshare_events`` in each row counts those).  Two sections:
   adaptive arm prices routing from a synthetic two-entry table (as
   tests/test_conformance.py does) to keep the bench calibration-free.
 
+* **recycled_vs_full** — recycled updates (Zhang et al. 1910.04581,
+  ``ProtocolConfig.recycle``) against the identical full run: fewer
+  crypto ops at EQUAL (bit-identical, tolerance 0) MSE.  The schema
+  lint enforces the row's claim, not just its shape.
+
 Emits ``BENCH_workloads.json`` + the harness CSV rows.  Run directly::
 
   PYTHONPATH=src python benchmarks/bench_workloads.py
@@ -144,6 +149,50 @@ def _arm_walls(rows, name, wl, m, n, iters):
     return out
 
 
+def _crypto_ops(stats) -> int:
+    """Total priced crypto ops across phases — excluding the 'recycled'
+    marker, which counts SKIPPED coefficients, not executed ops."""
+    return int(sum(v for phase in stats["ops"].values()
+                   for op, v in phase.items() if op != "recycled"))
+
+
+def _recycled_row(rows, iters: int):
+    """Recycled-vs-full updates (Zhang et al., arXiv:1910.04581): the
+    same lasso instance with ``recycle=True`` vs off.  At tolerance 0
+    the recycled run is bit-identical (equal MSE by construction), so
+    the row's claim is pure savings: fewer crypto ops, same solution."""
+    wl = workloads.get_default("lasso")
+    inst = wl.make_instance(24, 32, 4, seed=0)
+    spec = wl.calibrate_spec(inst.A, inst.y, 4, iters)
+    kw = dict(K=4, rho=wl.rho, lam=wl.lam, iters=iters, spec=spec,
+              cipher="plain", seed=0, workload="lasso")
+    full = protocol.run_protocol(inst.A, inst.y,
+                                 protocol.ProtocolConfig(**kw), workload=wl)
+    rec = protocol.run_protocol(inst.A, inst.y,
+                                protocol.ProtocolConfig(recycle=True, **kw),
+                                workload=wl)
+    ops_full, ops_rec = _crypto_ops(full.stats), _crypto_ops(rec.stats)
+    xf, _ = simulate_float(wl, inst.A, inst.y, 4, iters)
+    row = {
+        "workload": "lasso", "edges": 4, "iters": iters,
+        "crypto_ops_full": ops_full,
+        "crypto_ops_recycled": ops_rec,
+        "ops_saved_frac": 1.0 - ops_rec / max(ops_full, 1),
+        "recycled_updates": rec.stats["churn"]["recycled"],
+        "mse_full": float(np.mean((full.x - xf) ** 2)),
+        "mse_recycled": float(np.mean((rec.x - xf) ** 2)),
+        "equal_mse": bool(np.array_equal(full.history, rec.history)),
+        "traffic_full": full.stats["traffic_bytes"],
+        "traffic_recycled": rec.stats["traffic_bytes"],
+        "full": {"report": obs_metrics.report_core(full.stats)},
+        "recycled": {"report": obs_metrics.report_core(rec.stats)},
+    }
+    emit(rows, "workloads_recycled_vs_full", 0.0,
+         derived=f"ops_saved={ops_full - ops_rec};"
+                 f"equal_mse={row['equal_mse']}")
+    return row
+
+
 def run(rows: list, smoke: bool = False) -> None:
     edge_counts = (4,) if smoke else EDGE_COUNTS
     m, n, iters = (24, 16, 4) if smoke else (M, N, ITERS)
@@ -157,6 +206,10 @@ def run(rows: list, smoke: bool = False) -> None:
             arms[name] = _arm_walls_smoke(rows, name, wl, m, n, arm_iters)
         else:
             arms[name] = _arm_walls(rows, name, wl, 24, 32, arm_iters)
+    # recycling needs a converged tail to find stalled inputs, so the
+    # row keeps its own iteration count even in smoke runs (plain
+    # cipher: sub-second either way)
+    recycled = _recycled_row(rows, iters=30)
     with open(OUT_SMOKE if smoke else OUT, "w") as f:
         json.dump({"schema_version": BENCH_SCHEMA_VERSION,
                    "dims": {"M": m, "N": n, "iters": iters,
@@ -164,7 +217,8 @@ def run(rows: list, smoke: bool = False) -> None:
                             "smoke": smoke},
                    "tol_mse": TOL_MSE,
                    "accuracy": accuracy,
-                   "cipher_arms": arms}, f, indent=1)
+                   "cipher_arms": arms,
+                   "recycled_vs_full": recycled}, f, indent=1)
 
 
 def _arm_walls_smoke(rows, name, wl, m, n, iters):

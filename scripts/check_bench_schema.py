@@ -8,7 +8,9 @@ can't drift from the versioned schemas:
 * every ``BENCH_*.json`` must carry the top-level ``schema_version``
   (``benchmarks.common.BENCH_SCHEMA_VERSION``) and every embedded
   RunReport core (``"report"`` keys anywhere in the tree) must validate
-  against :func:`repro.obs.metrics.validate_report_core`;
+  against :func:`repro.obs.metrics.validate_report_core`; a
+  ``recycled_vs_full`` section (BENCH_workloads) must additionally
+  uphold its own claim — fewer crypto ops at bit-identical MSE;
 * every trace file must validate against
   :func:`repro.obs.chrome_trace.validate` (chrome-trace event structure,
   span categories, embedded RunReport).
@@ -41,6 +43,33 @@ def _iter_reports(obj, path="$"):
             yield from _iter_reports(v, f"{path}[{i}]")
 
 
+def _check_recycled_row(doc, path) -> list[str]:
+    """The recycled-vs-full row's own invariant: recycling must SAVE
+    crypto ops at EQUAL (bit-identical) MSE — a row that stops saving,
+    or stops being exact, is a regression the lint should catch."""
+    row = doc.get("recycled_vs_full")
+    if row is None:         # other BENCH_* artifacts don't carry the row
+        return []
+    errors = []
+    for key in ("crypto_ops_full", "crypto_ops_recycled",
+                "recycled_updates", "equal_mse"):
+        if key not in row:
+            errors.append(f"{path}: recycled_vs_full missing {key!r}")
+    if errors:
+        return errors
+    if not row["equal_mse"]:
+        errors.append(f"{path}: recycled_vs_full.equal_mse is false "
+                      "(tolerance-0 recycling must be bit-identical)")
+    if not row["crypto_ops_recycled"] < row["crypto_ops_full"]:
+        errors.append(f"{path}: recycled run saved no crypto ops "
+                      f"({row['crypto_ops_recycled']} >= "
+                      f"{row['crypto_ops_full']})")
+    if not row["recycled_updates"] > 0:
+        errors.append(f"{path}: recycled_vs_full recorded zero recycled "
+                      "updates")
+    return errors
+
+
 def check_bench(path: pathlib.Path) -> list[str]:
     from benchmarks.common import BENCH_SCHEMA_VERSION
     from repro.obs.metrics import validate_report_core
@@ -58,6 +87,7 @@ def check_bench(path: pathlib.Path) -> list[str]:
                       f"python -m benchmarks.run)")
     for where, report in _iter_reports(doc):
         errors.extend(validate_report_core(report, f"{path}:{where}"))
+    errors.extend(_check_recycled_row(doc, path))
     return errors
 
 

@@ -351,6 +351,19 @@ class ProtocolConfig:
     # (Historically deadline without latency_fn was a no-op.)
     deadline: float | None = None      # straggler cutoff (simulated seconds)
     latency_fn: Callable[[int, int], float] | None = None  # (edge, iter)->s
+    # dynamic-membership knobs (ROADMAP item 5). ``churn`` is a
+    # core.churn.ChurnSchedule of leave/rejoin/fail events both drivers
+    # consume identically; fail events (silent crashes) need the
+    # runtime's deadline machinery and are rejected by the synchronous
+    # reference loop.  ``recycle`` enables Zhang-1910.04581 recycled
+    # updates: an edge whose quantized (u1, u2) moved by at most
+    # ``recycle_tol`` integer steps since its last encrypted round
+    # reuses that round's decrypted chain — the enc/step/dec launches
+    # are skipped entirely and priced as a "recycled" op.  tol=0 reuses
+    # only bit-identical chains, so the trajectory is unchanged.
+    churn: object | None = None        # core.churn.ChurnSchedule
+    recycle: bool = False              # recycled-update mode
+    recycle_tol: int = 0               # quantized-int reuse tolerance
 
 
 @dataclasses.dataclass
@@ -512,6 +525,14 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
     wl = resolve_workload(cfg, workload)
     rng = random.Random(cfg.seed)
     K = cfg.K
+    churn = cfg.churn
+    if churn is not None:
+        churn.check(K, cfg.iters)
+        if churn.has_fails:
+            raise ValueError(
+                "fail events (silent crashes) need the runtime driver's "
+                "deadline machinery; the synchronous reference loop only "
+                "models graceful leave/rejoin")
     # split-axis contract: the stacked master iterate (N_state) and the
     # per-edge encrypted block (Nk) — column split keeps the historical
     # N, N//K; row-split consensus stacks K full-width copies
@@ -567,41 +588,113 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
     counter.phase = PHASE_ITERATE
     history = np.zeros((cfg.iters, N_state))
     reshare_events = 0
+    active = set(range(K))
+    churn_counts = {"leaves": 0, "rejoins": 0}
+    if churn is not None:
+        st.aux["churn_active"] = np.ones(K, dtype=bool)
+    # recycled-update cache: the quantized (u1, u2) pair of each edge's
+    # last ENCRYPTED round and the decrypted integer chain it produced.
+    # Invalidated whenever the edge's stored u3 changes (re-share or
+    # rejoin re-run) — the cached chain embeds Gamma_1(u3).
+    last_q: list = [None] * K
+    last_R: list = [None] * K
+    recycled = 0
 
     for t in range(cfg.iters):
+        if churn is not None:
+            # membership events apply at the top of the round, before
+            # the streaming re-shares, in schedule order — the runtime
+            # submits its coalesced encs in the same sequence, which
+            # keeps the blinding rng streams aligned across drivers
+            for ev in churn.events_at(t):
+                k = ev.edge
+                last_q[k] = last_R[k] = None
+                if ev.kind == "leave":
+                    # graceful handoff: the master already holds the
+                    # block (it decrypts every round); the block just
+                    # freezes (column split) or folds out of the
+                    # consensus aggregate (row split) via the
+                    # churn_active mask until the edge returns
+                    active.discard(k)
+                    st.aux["churn_active"][k] = False
+                    churn_counts["leaves"] += 1
+                    continue
+                # rejoin: FULL init-phase re-run — re-ship (Q_k, mu,
+                # scale), rebuild B_k / C_k row sums / u3_k and
+                # re-encrypt Gamma_1(u3_k): the PR-5 reshare contract
+                # generalized from u3-only to C_k/Q_k
+                active.add(k)
+                st.aux["churn_active"][k] = True
+                churn_counts["rejoins"] += 1
+                Qk, mu, scale = wl.edge_setup(st, k)
+                traffic["master->edge"] += Qk.nbytes
+                Bk = edges[k].init_phase(Qk, mu, scale)
+                traffic["edge->master"] += Bk.nbytes
+                C_rowsums[k] = (Bk * scale) @ np.ones(Nk)
+                Bks[k] = Bk
+                u3s[k] = wl.share_vector(st, k, Bk)
+                c_alpha = box.encrypt(np.asarray(gamma1(u3s[k], spec)))
+                traffic["master->edge"] += box.ct_bytes(Nk)
+                edges[k].store_shared(c_alpha)
         if wl.streaming:
             # streaming contract: re-run the encrypted share phase for
             # the edges whose data moved this round (u3 only; C_k is
             # fixed per run).  Accounted in the "iterate" phase — a
             # re-share is round-synchronous work, and the runtime's
             # coalescing queue fuses these encs into the same launch as
-            # the round's (u1, u2) encryptions.
+            # the round's (u1, u2) encryptions.  Absent edges miss the
+            # refresh (their next rejoin re-runs the whole init phase).
             for k in wl.reshare(st, t):
+                if k not in active:
+                    continue
                 u3s[k] = wl.share_vector(st, k, Bks[k])
                 c_alpha = box.encrypt(np.asarray(gamma1(u3s[k], spec)))
                 traffic["master->edge"] += box.ct_bytes(Nk)
                 edges[k].store_shared(c_alpha)
                 reshare_events += 1
+                last_q[k] = last_R[k] = None
         x_new = np.zeros(N_state)
         for k, edge in enumerate(edges):
             sl = slice(k * Nk, (k + 1) * Nk)
+            if k not in active:
+                x_new[sl] = st.x_prev[sl]      # frozen handoff block
+                continue
             u1, u2 = wl.iter_inputs(st, k)
             qz = np.asarray(gamma2(u1, spec))
             qv = np.asarray(gamma2(u2, spec))
-            cz = box.encrypt(qz)
-            cv = box.encrypt(qv)
-            traffic["master->edge"] += 2 * box.ct_bytes(Nk)
-
             w_sum = float(np.sum(u1 + u2))
-            x_hat = edge.private_step(cz, cv, box)
-            traffic["edge->master"] += box.ct_bytes(Nk)
+            if cfg.recycle and last_q[k] is not None \
+                    and int(np.max(np.abs(qz - last_q[k][0]))) \
+                    <= cfg.recycle_tol \
+                    and int(np.max(np.abs(qv - last_q[k][1]))) \
+                    <= cfg.recycle_tol:
+                # recycled update (Zhang 1910.04581): the quantized
+                # inputs (and the stored u3) match the edge's last
+                # encrypted round, so its chain would decrypt to the
+                # cached R — skip the enc/step/dec entirely and
+                # re-dequantize with THIS round's w-sum (a plaintext
+                # master-side scalar).  With tol=0 the reuse is exact.
+                counter.bump("recycled", Nk)
+                recycled += 1
+                R = last_R[k]
+            else:
+                cz = box.encrypt(qz)
+                cv = box.encrypt(qv)
+                traffic["master->edge"] += 2 * box.ct_bytes(Nk)
+                x_hat = edge.private_step(cz, cv, box)
+                traffic["edge->master"] += box.ct_bytes(Nk)
 
-            if cfg.collaborative and key is not None and cfg.cipher == "gold":
-                # decryption assist: edge ships (x-hat)' = x-hat mod p^2
-                _ = edge.reduce_p2(x_hat)
-                traffic["edge->master"] += (key.p2.bit_length() + 7) // 8 * Nk
+                if cfg.collaborative and key is not None \
+                        and cfg.cipher == "gold":
+                    # decryption assist: edge ships (x-hat)' mod p^2
+                    _ = edge.reduce_p2(x_hat)
+                    traffic["edge->master"] += \
+                        (key.p2.bit_length() + 7) // 8 * Nk
 
-            R = box.decrypt(x_hat).astype(np.float64)
+                R = box.decrypt(x_hat).astype(np.float64)
+                if cfg.recycle:
+                    last_q[k] = (qz, qv)
+                    last_R[k] = R
             x_new[sl] = np.asarray(dequantize_theorem1(
                 R, C_rowsums[k], w_sum, Nk, spec))
         # master updates (10b)/(10c) with the (t-1) iterate — Jacobi order
@@ -614,7 +707,8 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
         driver="protocol", ops=counter.as_dict(), traffic=traffic,
         key_bits=None if key is None else key.n.bit_length(),
         cipher=cfg.cipher, workload=wl.name,
-        reshare_events=reshare_events, history=history)
+        reshare_events=reshare_events, history=history,
+        churn={**churn_counts, "recycled": recycled})
     return ProtocolResult(x=st.x_prev, history=history, stats=stats,
                           stale_events=0)
 

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro import workloads
 from repro.core import protocol
+from repro.core.churn import ChurnSchedule
 from repro.core.quantization import QuantSpec
 from repro.data.synthetic import make_lasso
 from repro.obs import chrome_trace, trace as trace_mod
@@ -58,6 +59,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--bandwidth", type=float, default=125e6)
     ap.add_argument("--jitter", type=float, default=0.0)
     ap.add_argument("--drop", type=float, default=0.0)
+    ap.add_argument("--churn", default=None, metavar="SPEC",
+                    help="membership churn schedule: 'quarter' (25%% of "
+                         "the edges leave at iters/3 and rejoin at "
+                         "2*iters/3), 'quarter:fail' (same but silent "
+                         "crashes — needs --mode deadline), or "
+                         "'random[:rate[:fail_frac]]' (seeded per-round "
+                         "churn, e.g. random:0.1:0.5)")
+    ap.add_argument("--recycle", action="store_true",
+                    help="recycled updates: an edge whose quantized "
+                         "inputs did not move since its last encrypted "
+                         "round reuses the cached decrypted chain, "
+                         "skipping enc + launch + dec (exact at the "
+                         "default tolerance 0)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--calib-cache", default=None,
                     help="override the dispatch calibration cache path")
@@ -69,17 +83,39 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def parse_churn(spec: str, K: int, iters: int, seed: int) -> ChurnSchedule:
+    """``--churn`` spec string -> a validated :class:`ChurnSchedule`."""
+    head, *rest = spec.split(":")
+    if head == "quarter":
+        kind = rest[0] if rest else "leave"
+        return ChurnSchedule.quarter(K, iters, kind=kind)
+    if head == "random":
+        rate = float(rest[0]) if rest else 0.1
+        fail_frac = float(rest[1]) if len(rest) > 1 else 0.0
+        return ChurnSchedule.random(K, iters, seed=seed, rate=rate,
+                                    fail_frac=fail_frac)
+    raise SystemExit(f"unknown --churn spec {spec!r} "
+                     "(expected quarter[:kind] or random[:rate[:fail_frac]])")
+
+
 def main(argv=None) -> dict:
     args = build_parser().parse_args(argv)
     K = args.edges
     N = K * args.block
     M = max(N // 2, 8)
+    churn = (parse_churn(args.churn, K, args.iters, args.seed)
+             if args.churn else None)
     wl = None
     if args.workload is not None:
         wl = workloads.get(args.workload, rho=1.0, lam=0.05)
         winst = wl.make_instance(M, N, K, seed=args.seed)
         inst_A, inst_y, x_true = winst.A, winst.y, winst.x_true
-        spec = wl.calibrate_spec(inst_A, inst_y, K, args.iters)
+        # the quantization-range contract must cover the churned
+        # trajectory, not the full-membership one (the rehearsal treats
+        # fails as graceful departures: the range only depends on which
+        # blocks participate)
+        spec = wl.calibrate_spec(inst_A, inst_y, K, args.iters,
+                                 churn=churn)
     else:   # legacy LASSO setup, fixed quantization range
         inst = make_lasso(M, N, sparsity=0.1, noise=0.01, seed=args.seed)
         inst_A, inst_y, x_true = inst.A, inst.y, inst.x_true
@@ -94,7 +130,8 @@ def main(argv=None) -> dict:
         K=K, lam=0.05, iters=args.iters, spec=spec,
         workload=args.workload or "lasso",
         cipher=args.backend, key_bits=args.key_bits, seed=args.seed,
-        deadline=args.deadline, latency_fn=latency_fn)
+        deadline=args.deadline, latency_fn=latency_fn,
+        churn=churn, recycle=args.recycle)
     link = LinkModel(bytes_per_s=args.bandwidth, latency_s=args.latency,
                      jitter_s=args.jitter, drop_prob=args.drop)
     tracer = trace_mod.Tracer() if args.trace else trace_mod.NULL
@@ -118,6 +155,7 @@ def main(argv=None) -> dict:
         "events": rstats["events"],
         "traffic_bytes": r.stats["traffic_bytes"],
         "reshare_events": r.stats.get("reshare_events", 0),
+        "churn": r.stats["churn"],
         "stale_events": r.stale_events,
         "retransmits": rstats["retransmits"],
         "coalesced_ops": rstats["coalesced_ops"],

@@ -33,8 +33,14 @@ REPORT_SCHEMA_VERSION = 1
 #: sections that must be identical between the two drivers in sync mode
 #: (everything else — "driver", "runtime" — is timing/telemetry)
 CORE_SECTIONS = ("schema_version", "workload", "cipher", "key_bits",
-                 "ops", "traffic_bytes", "reshare_events",
+                 "ops", "traffic_bytes", "reshare_events", "churn",
                  "mse_trajectory")
+
+#: the ``churn`` section's fixed key set (all ints): injected events
+#: (leaves / rejoins / fails), failures the deadline machinery *detected*
+#: (deaths), and recycled-update skips.  Both drivers emit the full dict
+#: (zeros on churn-free runs) so sync-mode report cores stay comparable.
+CHURN_KEYS = ("leaves", "rejoins", "fails", "deaths", "recycled")
 
 
 # ---------------------------------------------------------------------------
@@ -134,15 +140,19 @@ def mse_trajectory(history: np.ndarray) -> list[float]:
 def build_run_report(*, driver: str, ops: dict, traffic: dict,
                      key_bits: int | None, cipher: str, workload: str,
                      reshare_events: int, history: np.ndarray,
+                     churn: dict | None = None,
                      runtime: dict | None = None) -> dict:
     """Assemble the schema-versioned stats dict for one protocol run.
 
     ``ops`` is ``OpCounter.as_dict()`` (already in stable key order);
+    ``churn`` is the driver's membership/recycle tally (missing keys
+    zero-filled against :data:`CHURN_KEYS`, ``None`` = all zeros);
     ``runtime`` is the runtime driver's telemetry section (virtual clock,
     coalescing, dispatch, trace) and is omitted for the synchronous
     reference driver.  The returned dict IS ``ProtocolResult.stats`` —
     existing consumers keep reading ``stats["ops"]`` etc. unchanged.
     """
+    churn = churn or {}
     report = {
         "schema_version": REPORT_SCHEMA_VERSION,
         "driver": driver,
@@ -152,6 +162,7 @@ def build_run_report(*, driver: str, ops: dict, traffic: dict,
         "cipher": cipher,
         "workload": workload,
         "reshare_events": int(reshare_events),
+        "churn": {k: int(churn.get(k, 0)) for k in CHURN_KEYS},
         "mse_trajectory": mse_trajectory(history),
     }
     if runtime is not None:
@@ -210,4 +221,12 @@ def validate_report_core(report: dict, where: str = "report") -> list[str]:
             if not isinstance(ops, dict) or not all(
                     isinstance(v, int) for v in ops.values()):
                 errors.append(f"{where}: ops[{ph!r}] not a str->int dict")
+    # "churn" joined the core sections after schema v1 artifacts were
+    # committed: validated when present, not required
+    if "churn" in report:
+        ch = report["churn"]
+        if not isinstance(ch, dict) or not all(
+                k in ch and isinstance(ch[k], int) for k in CHURN_KEYS):
+            errors.append(f"{where}: churn section must carry int "
+                          f"{'/'.join(CHURN_KEYS)}")
     return errors

@@ -39,6 +39,25 @@ timestamps keeps a re-share ahead of its round's ``"step"`` on the same
 link; under jitter a step may overtake it, in which case that edge's
 round runs on the previous segment's u3 — bounded staleness, never
 corruption.
+
+Churn (``cfg.churn``, a :class:`~repro.core.churn.ChurnSchedule`)
+applies at the top of each round, before the round's re-shares and
+(u1, u2) encryptions: a ``leave`` freezes/folds the departing block
+exactly as ``run_protocol`` does; a ``rejoin`` re-runs the full init
+phase for that edge (Q_k shipped as a round-tagged ``"reinit"``, B_k
+rebuilt edge-side, Gamma_1(u3) re-encrypted through the round's
+coalesced enc launch — the re-share contract generalized from u3-only
+to C_k/Q_k); a ``fail`` is pure fault injection — the edge actor stops
+replying and the master is NOT told.  Detection rides the deadline
+machinery: stale cached blocks substitute while they last, then the
+master probes every ``cfg.deadline``; after ``fail_detect`` silent
+probes the edge is declared dead and folded out like a departure (so
+fail schedules require ``mode="deadline"``).  Recycled updates
+(``cfg.recycle``, Zhang et al. arXiv:1910.04581): an edge whose
+quantized (u1, u2) moved by at most ``cfg.recycle_tol`` since its last
+fresh round reuses the cached decrypted chain — no enc, no launch, no
+dec, no traffic — priced as a ``recycled`` op and a ``churn:recycle``
+span; at the default tolerance 0 the trajectory is bit-identical.
 """
 from __future__ import annotations
 
@@ -71,13 +90,27 @@ class EdgeActor:
         self.rt = rt
         self.node = protocol.EdgeNode(k, rt.cfg.spec)
         self._share_round = -1   # newest re-share round stored so far
+        self.alive = True        # fault-injection switch (churn "fail")
 
     def on_message(self, msg: Message) -> None:
         rt = self.rt
+        if not self.alive:
+            # crashed silently: inbound messages vanish, nothing replies.
+            # The master finds out only through its deadline machinery.
+            return
         if msg.tag == "init":
             Qk, mu, scale = msg.payload
             Bk = self.node.init_phase(Qk, mu, scale)
             rt.transport.send(self.name, MASTER, "init_ok", (self.k, Bk),
+                              nbytes=Bk.nbytes)
+        elif msg.tag == "reinit":
+            # churn rejoin: the full init-phase re-run.  The edge rebuilds
+            # B_k / Gamma_2(C_k); the reply carries no content the master
+            # needs (it re-derived B_k itself to keep enc ordering) but
+            # prices the handback at B_k's width, matching run_protocol.
+            Qk, mu, scale = msg.payload
+            Bk = self.node.init_phase(Qk, mu, scale)
+            rt.transport.send(self.name, MASTER, "reinit_ok", self.k,
                               nbytes=Bk.nbytes)
         elif msg.tag == "collab":
             self.node.collab_setup(*msg.payload)
@@ -162,6 +195,17 @@ class MasterActor:
         self.iter_times: list[float] = []
         self.t = -1
         self.done = False
+        # churn + recycled-update state (mirrors run_protocol's frame)
+        self.churn = cfg.churn
+        self.active = set(range(K))
+        self.churn_counts = {"leaves": 0, "rejoins": 0, "fails": 0,
+                             "deaths": 0}
+        self.recycled = 0
+        if self.churn is not None:
+            self.wst.aux["churn_active"] = np.ones(K, dtype=bool)
+        self.last_q: list = [None] * K   # last encrypted (qz, qv) pair
+        self.last_R: list = [None] * K   # its decrypted integer chain
+        self._q_rounds: dict[int, dict[int, tuple]] = {}
 
     # -- Initialization phase -------------------------------------------
     def start(self) -> None:
@@ -202,7 +246,7 @@ class MasterActor:
                 self._iterate(0)
         elif msg.tag == "xhat":
             self._on_xhat(*msg.payload)
-        elif msg.tag == "assist":
+        elif msg.tag in ("assist", "reinit_ok"):
             pass  # byte accounting only; content unused by the simulation
         else:
             raise ValueError(f"master got unexpected tag {msg.tag!r}")
@@ -230,6 +274,56 @@ class MasterActor:
                           nbytes=rt.box.ct_bytes(rt.nk))
 
     # -- Parallel privacy-computing phase ---------------------------------
+    def _apply_churn(self, t: int) -> None:
+        """Apply the schedule's round-``t`` events (top of round, before
+        the streaming re-shares — the order run_protocol fixes)."""
+        rt, cfg = self.rt, self.rt.cfg
+        for ev in self.churn.events_at(t):
+            k = ev.edge
+            self.last_q[k] = self.last_R[k] = None
+            if rt.tracer.enabled:
+                rt.tracer.add(f"churn:{ev.kind}", "churn", t=rt.sched.now,
+                              edge=k, round=t)
+            if ev.kind == "leave":
+                # graceful handoff: the master already holds the block
+                # (it decrypts every round), so departure is zero-traffic
+                # — the block freezes / folds out via churn_active
+                self.active.discard(k)
+                self.wst.aux["churn_active"][k] = False
+                self.x_hat_cache[k] = None
+                self.churn_counts["leaves"] += 1
+            elif ev.kind == "fail":
+                # fault INJECTION, not protocol logic: the harness flips
+                # the actor's crash switch; the master learns nothing
+                # here — detection is the deadline + probe machinery's
+                # job (see _on_deadline/_probe)
+                rt.edge_actors[k].alive = False
+                self.churn_counts["fails"] += 1
+            else:  # rejoin — FULL init-phase re-run (PR-5 reshare
+                # contract generalized from u3-only to C_k/Q_k)
+                self.active.add(k)
+                self.wst.aux["churn_active"][k] = True
+                self.x_hat_cache[k] = None
+                rt.edge_actors[k].alive = True
+                self.churn_counts["rejoins"] += 1
+                Qk, mu, scale = self.wl.edge_setup(self.wst, k)
+                self.edge_setups[k] = (Qk, mu, scale)
+                rt.transport.send(MASTER, edge_name(k), "reinit",
+                                  (Qk, mu, scale), nbytes=Qk.nbytes)
+                # the master re-derives B_k itself (the identical inverse
+                # the edge computes on "reinit") instead of barriering on
+                # reinit_ok: this round's enc submissions must keep
+                # run_protocol's order — rejoin u3 first, then streaming
+                # re-shares, then the z/v pairs — for blinding-rng parity
+                Bk = np.linalg.inv(Qk + mu * np.eye(rt.nk))
+                sc = mu if scale is None else scale
+                self.C_rowsums[k] = (Bk * sc) @ np.ones(rt.nk)
+                self.Bks[k] = Bk
+                self.u3s[k] = self.wl.share_vector(self.wst, k, Bk)
+                q_alpha = np.asarray(gamma1(self.u3s[k], cfg.spec))
+                rt.cq.submit("enc", (q_alpha,),
+                             partial(self._reshare_ready, k, t))
+
     def _iterate(self, t: int) -> None:
         rt, cfg = self.rt, self.rt.cfg
         self.t = t
@@ -239,6 +333,9 @@ class MasterActor:
         self.finalized = False
         self.deadline_passed = False
         self.must_wait: set[int] = set()
+        self.recycled_now: set[int] = set()
+        if self.churn is not None:
+            self._apply_churn(t)
         if self.wl.streaming:
             # streaming re-shares go FIRST so (a) the coalescing queue
             # batches them into the same enc launch as this round's
@@ -248,6 +345,10 @@ class MasterActor:
             # step may overtake its re-share — the edge then computes on
             # the previous segment's u3: staleness, never corruption.
             for k in self.wl.reshare(self.wst, t):
+                if k not in self.active:
+                    continue     # absent edges miss the refresh; their
+                                 # rejoin re-runs the whole init phase
+                self.last_q[k] = self.last_R[k] = None
                 self.u3s[k] = self.wl.share_vector(self.wst, k, self.Bks[k])
                 q_alpha = np.asarray(gamma1(self.u3s[k], cfg.spec))
                 # accounted in the "iterate" phase (round-synchronous
@@ -260,13 +361,38 @@ class MasterActor:
                     rt.tracer.add("reshare", "reshare", t=rt.sched.now,
                                   edge=k, round=t)
         for k in range(cfg.K):
+            if k not in self.active:
+                continue                    # frozen handoff block
             u1, u2 = self.wl.iter_inputs(self.wst, k)
             self.w_cur[k] = float(np.sum(u1 + u2))
             qz = np.asarray(gamma2(u1, cfg.spec))
             qv = np.asarray(gamma2(u2, cfg.spec))
+            if cfg.recycle and self.last_q[k] is not None \
+                    and int(np.max(np.abs(qz - self.last_q[k][0]))) \
+                    <= cfg.recycle_tol \
+                    and int(np.max(np.abs(qv - self.last_q[k][1]))) \
+                    <= cfg.recycle_tol:
+                # recycled update: skip enc + step + dec; _finalize
+                # re-dequantizes the cached integer chain with THIS
+                # round's w-sum (see run_protocol for why tol=0 is exact)
+                rt.counter.bump("recycled", rt.nk)
+                self.recycled += 1
+                self.recycled_now.add(k)
+                if rt.tracer.enabled:
+                    rt.tracer.add("churn:recycle", "churn", t=rt.sched.now,
+                                  edge=k, round=t)
+                continue
+            self._q_rounds.setdefault(t, {})[k] = (qz, qv)
             rt.cq.submit("enc", (qz,), partial(self._enc_done, t, k, "z"))
             rt.cq.submit("enc", (qv,), partial(self._enc_done, t, k, "v"))
+        # the reply barrier for this round: live edges we actually asked
+        # (a failed edge stays in here — the master doesn't know yet)
+        self._round_edges = self.active - self.recycled_now
         self._w_rounds[t] = self.w_cur
+        if not self._round_edges:
+            # every live edge recycled: nothing in flight this round
+            self._finalize()
+            return
         if rt.mode == "deadline":
             rt.sched.after(cfg.deadline, partial(self._on_deadline, t),
                            label=f"deadline:{t}")
@@ -295,7 +421,7 @@ class MasterActor:
             self.replies[k] = x_hat
             self.x_hat_cache[k] = (x_hat, self.w_cur[k], t_msg)
             self.must_wait.discard(k)
-            if len(self.replies) == self.rt.cfg.K or \
+            if len(self.replies) == len(self._round_edges) or \
                     (self.deadline_passed and not self.must_wait):
                 self._finalize()
             return
@@ -316,35 +442,99 @@ class MasterActor:
         # staleness bound (SSP-style): unbounded lag would let a deadline
         # shorter than the physical round-trip freeze blocks forever
         self.must_wait = {
-            k for k in range(self.rt.cfg.K)
+            k for k in self._round_edges
             if k not in self.replies
             and (self.x_hat_cache[k] is None
                  or t - self.x_hat_cache[k][2] > self.rt.stale_limit)}
         if not self.must_wait:
             self._finalize()
+        elif self.churn is not None and self.churn.has_fails:
+            # a must-wait edge might be dead, and a dead edge never
+            # replies — arm the probe chain so the barrier can't hang.
+            # Without fails in the schedule every edge eventually
+            # answers, so the chain stays off and slow-but-alive edges
+            # are never misdeclared.
+            self.rt.sched.after(self.rt.cfg.deadline,
+                                partial(self._probe, t, 1),
+                                label=f"probe:{t}:1")
+
+    def _probe(self, t: int, attempt: int) -> None:
+        rt = self.rt
+        if t != self.t or self.finalized or not self.must_wait:
+            return
+        if attempt < rt.fail_detect:
+            rt.sched.after(rt.cfg.deadline,
+                           partial(self._probe, t, attempt + 1),
+                           label=f"probe:{t}:{attempt + 1}")
+            return
+        # silent past the detection budget (fail_detect deadline periods
+        # on top of the stale-cache grace): declare dead and fold the
+        # block out — the same handoff semantics as a graceful leave,
+        # minus the goodbye
+        for k in sorted(self.must_wait):
+            self.churn_counts["deaths"] += 1
+            self.active.discard(k)
+            self._round_edges.discard(k)
+            self.wst.aux["churn_active"][k] = False
+            self.x_hat_cache[k] = None
+            self.last_q[k] = self.last_R[k] = None
+            if rt.tracer.enabled:
+                rt.tracer.add("churn:dead", "churn", t=rt.sched.now,
+                              edge=k, round=t)
+        self.must_wait.clear()
+        self._finalize()
 
     def _finalize(self) -> None:
         rt, cfg = self.rt, self.rt.cfg
         self.finalized = True
         self._x_new = np.zeros(cfg.K * rt.nk)
         self._n_dec = 0
+        self._dec_target = len(self._round_edges)
         for k in range(cfg.K):
+            sl = slice(k * rt.nk, (k + 1) * rt.nk)
+            if k not in self.active:
+                # departed/dead: frozen at the master's handoff copy
+                self._x_new[sl] = self.wst.x_prev[sl]
+                continue
+            if k in self.recycled_now:
+                # recycled update: cached chain, this round's w-sum
+                self._x_new[sl] = np.asarray(dequantize_theorem1(
+                    self.last_R[k], self.C_rowsums[k], self.w_cur[k],
+                    rt.nk, cfg.spec))
+                continue
             if k in self.replies:
-                x_hat, w_sum = self.replies[k], self.w_cur[k]
+                x_hat, w_sum, fresh = self.replies[k], self.w_cur[k], True
             else:
                 x_hat, w_sum, _ = self.x_hat_cache[k]
                 self.stale_events += 1
-            rt.cq.submit("dec", (x_hat,), partial(self._dec_done, k, w_sum))
+                fresh = False
+            rt.cq.submit("dec", (x_hat,),
+                         partial(self._dec_done, k, w_sum, fresh))
+        if self._dec_target == 0:
+            self._round_done()
 
-    def _dec_done(self, k: int, w_sum: float, R) -> None:
+    def _dec_done(self, k: int, w_sum: float, fresh: bool, R) -> None:
         rt, cfg = self.rt, self.rt.cfg
         sl = slice(k * rt.nk, (k + 1) * rt.nk)
+        R = np.asarray(R).astype(np.float64)
         self._x_new[sl] = np.asarray(dequantize_theorem1(
-            np.asarray(R).astype(np.float64), self.C_rowsums[k],
-            w_sum, rt.nk, cfg.spec))
+            R, self.C_rowsums[k], w_sum, rt.nk, cfg.spec))
+        if fresh and cfg.recycle:
+            # the recycle cache pairs the decrypted chain with the exact
+            # quantized inputs that produced it — only a CURRENT-round
+            # reply (not a stale substitution) may refresh it
+            pair = self._q_rounds.get(self.t, {}).get(k)
+            if pair is not None:
+                self.last_q[k] = pair
+                self.last_R[k] = R
         self._n_dec += 1
-        if self._n_dec < cfg.K:
+        if self._n_dec < self._dec_target:
             return
+        self._round_done()
+
+    def _round_done(self) -> None:
+        rt, cfg = self.rt, self.rt.cfg
+        self._q_rounds.pop(self.t, None)
         if self.wl.uses_secure_agg and rt.tracer.enabled:
             # the z-update aggregate of this round goes through secure
             # aggregation inside global_update below
@@ -369,7 +559,8 @@ class _Runtime:
     """Wiring bag shared by the actors (scheduler, transport, crypto)."""
 
     def __init__(self, sched, transport, cq, box, key, counter, cfg, nk,
-                 mode, cost, stale_limit, tracer=trace_mod.NULL):
+                 mode, cost, stale_limit, tracer=trace_mod.NULL,
+                 fail_detect=3):
         self.sched = sched
         self.transport = transport
         self.cq = cq
@@ -382,6 +573,9 @@ class _Runtime:
         self.cost = cost
         self.stale_limit = stale_limit
         self.tracer = tracer
+        self.fail_detect = fail_detect
+        self.edge_actors: list = []   # filled by run_on_runtime (the
+                                      # fault-injection handle for fails)
 
 
 def auto_hold_ticks(topo: Topology, transport: Transport, tick_s: float,
@@ -419,6 +613,7 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
                    tick_s: float = 1e-4,
                    cost_model: dispatch.CostModel | None = None,
                    stale_limit: int = 4,
+                   fail_detect: int = 3,
                    table: dict | None = None,
                    calib_path: str | None = None,
                    coalesce_hold_ticks: "int | str" = 0,
@@ -462,6 +657,13 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     mode = mode or ("deadline" if cfg.deadline is not None else "sync")
     if mode == "deadline" and cfg.deadline is None:
         raise ValueError("deadline mode needs cfg.deadline")
+    if cfg.churn is not None:
+        cfg.churn.check(K, cfg.iters)
+        if cfg.churn.has_fails and mode != "deadline":
+            raise ValueError(
+                "fail events (silent crashes) need deadline mode — sync "
+                "mode barriers on every reply and would hang on a dead "
+                "edge; use graceful 'leave' events or set cfg.deadline")
 
     counter = protocol.OpCounter()
     if cfg.cipher == "auto":
@@ -493,12 +695,13 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         box.clock = lambda: sched.now
     cost = cost_model or dispatch.CostModel()
     rt = _Runtime(sched, transport, cq, box, key, counter, cfg, nk, mode,
-                  cost, stale_limit, tracer=tracer)
+                  cost, stale_limit, tracer=tracer, fail_detect=fail_detect)
 
     master = MasterActor(rt, np.asarray(A, np.float64),
                          np.asarray(y, np.float64), wl)
     transport.bind(MASTER, master.on_message)
     edge_actors = [EdgeActor(k, rt) for k in range(K)]
+    rt.edge_actors = edge_actors
     for ea in edge_actors:
         transport.bind(ea.name, ea.on_message)
     # relays are pure forwarding hops: Transport prices them per hop and
@@ -555,6 +758,7 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         driver="runtime", ops=ops, traffic=traffic, key_bits=key_bits,
         cipher=cfg.cipher, workload=wl.name,
         reshare_events=master.reshare_events, history=master.history,
+        churn={**master.churn_counts, "recycled": master.recycled},
         runtime=runtime)
     return protocol.ProtocolResult(
         x=master.wst.x_prev, history=master.history, stats=stats,

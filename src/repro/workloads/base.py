@@ -215,13 +215,18 @@ class Workload:
         ``block_dim`` is the length of every per-edge encrypted block
         (the protocol's ciphertext batch size, Remark-2 chain width);
         ``state_dim == K * block_dim`` is the master's stacked iterate.
-        Column split (default): x is partitioned, ``block_dim = N/K``.
+        Column split (default): x is partitioned, ``block_dim =
+        ceil(N/K)``.  When K does not divide N the state is padded
+        internally — ``init_state`` appends zero columns to A, the dead
+        coordinates converge to 0 under the ridge-regularized block
+        solve, and :meth:`fold_solution` strips them — so ragged feature
+        counts run through the protocol unchanged.
         Row split (consensus): every edge holds a full-width local copy,
-        ``block_dim = N`` and the state stacks K copies."""
+        ``block_dim = N`` and the state stacks K copies (ragged M is
+        padded with inert zero ROWS instead; see consensus.py)."""
         N = A.shape[1]
-        if N % K:
-            raise ValueError(f"column split needs K | N ({N} % {K} != 0)")
-        return N, N // K
+        Nk = -(-N // K)                      # ceil: internal padding
+        return K * Nk, Nk
 
     # -- state ------------------------------------------------------------
     def init_state(self, A: np.ndarray, y: np.ndarray, ys: np.ndarray,
@@ -230,9 +235,16 @@ class Workload:
         ``ys`` from ``y`` ("consistent" = y/K), so hooks that rebuild
         ``ys`` mid-run (streaming re-shares) keep it."""
         A = np.asarray(A, np.float64)
+        dims = self.dims(A, K)
+        if self.split == "column" and dims[0] > A.shape[1]:
+            # ragged column split: pad A with zero columns up to K*Nk.
+            # The padded coordinates see no data (zero column => zero
+            # gradient) and a mu-regularized block solve, so they sit at
+            # 0 throughout; fold_solution(x, K, n=N) strips them.
+            A = np.concatenate(
+                [A, np.zeros((A.shape[0], dims[0] - A.shape[1]))], axis=1)
         st = WorkloadState(A, np.asarray(y, np.float64),
-                           np.asarray(ys, np.float64), K,
-                           dims=self.dims(A, K))
+                           np.asarray(ys, np.float64), K, dims=dims)
         st.y_scale = y_scale
         return st
 
@@ -272,9 +284,21 @@ class Workload:
         return st.z[sl], -st.v[sl]
 
     def global_update(self, st: WorkloadState, x_new: np.ndarray) -> None:
-        """Master's (10b)/(10c) with the (t-1) iterate — Jacobi order."""
+        """Master's (10b)/(10c) with the (t-1) iterate — Jacobi order.
+
+        Under churn (``st.aux["churn_active"]``, a length-K bool mask the
+        drivers maintain) a departed edge's block is FROZEN: its (z, v)
+        slice keeps its handoff value, mirroring the frozen x block the
+        driver writes into ``x_new`` — the whole block state resumes
+        unchanged on rejoin."""
         z_new = np.asarray(self.prox_z(st.v + st.x_prev))
-        st.v = st.v + st.x_prev - z_new
+        v_new = st.v + st.x_prev - z_new
+        act = st.aux.get("churn_active")
+        if act is not None and not act.all():
+            m = np.repeat(np.asarray(act, bool), st.Nk)
+            z_new = np.where(m, z_new, st.z)
+            v_new = np.where(m, v_new, st.v)
+        st.v = v_new
         st.z = z_new
         st.x_prev = x_new
 
@@ -293,16 +317,22 @@ class Workload:
         trusted independent solver) — the convergence-test oracle."""
         raise NotImplementedError
 
-    def fold_solution(self, x: np.ndarray, K: int) -> np.ndarray:
+    def fold_solution(self, x: np.ndarray, K: int,
+                      n: int | None = None) -> np.ndarray:
         """Collapse the master's stacked iterate to one model estimate.
 
         Identity for column split (the stacked iterate IS the model);
-        row-split consensus averages its K full-width copies.  Callers
-        that compare a protocol solution against an N-dimensional truth
-        (edge_sim, workload_zoo, the convergence tests) fold first."""
-        return x
+        row-split consensus averages its K full-width copies.  ``n``
+        (the model width, ``A.shape[1]``) strips the internal padding a
+        ragged column split appends — omit it for divisible dims.
+        Callers that compare a protocol solution against an
+        N-dimensional truth (edge_sim, workload_zoo, the convergence
+        tests) fold first."""
+        x = np.asarray(x)
+        return x if n is None else x[:n]
 
     def metrics(self, inst: WorkloadInstance, x: np.ndarray) -> dict:
+        x = np.asarray(x)[:inst.A.shape[1]]   # strip ragged-split padding
         out = {"objective": self.objective(inst.A, inst.y, x)}
         if inst.x_true is not None:
             out["mse_vs_truth"] = float(np.mean((x - inst.x_true) ** 2))
@@ -312,7 +342,8 @@ class Workload:
     def calibrate_spec(self, A: np.ndarray, y: np.ndarray, K: int,
                        iters: int, delta: float | None = None,
                        margin: float = 2.0,
-                       y_scale: str = "consistent") -> QuantSpec:
+                       y_scale: str = "consistent",
+                       churn=None) -> QuantSpec:
         """Pick a symmetric [−zmax, zmax] covering every quantized value.
 
         Rehearses the iteration in plain float64 (``simulate_float``)
@@ -321,10 +352,14 @@ class Workload:
         and rounds zmax up to a power of two (deterministic, so all
         cipher arms derive the same spec).  In-range inputs are exactly
         what Theorem 1 needs for the dequantization to be exact up to
-        quantization rounding.
+        quantization rounding.  A churned run passes its
+        :class:`~repro.core.churn.ChurnSchedule` so the rehearsal walks
+        the same membership trajectory (the consensus z-prox rescales to
+        the active count, which can shift the range).
         """
         _, _, vmax = simulate_float(self, A, y, K, iters,
-                                    y_scale=y_scale, track_range=True)
+                                    y_scale=y_scale, track_range=True,
+                                    churn=churn)
         zmax = float(2.0 ** math.ceil(math.log2(max(margin * vmax, 1.0))))
         return QuantSpec(delta=self.delta if delta is None else delta,
                          zmin=-zmax, zmax=zmax)
@@ -336,24 +371,38 @@ class Workload:
 
 def simulate_float(wl: Workload, A: np.ndarray, y: np.ndarray, K: int,
                    iters: int, y_scale: str = "consistent",
-                   track_range: bool = False):
+                   track_range: bool = False, churn=None):
     """The workload's distributed iteration in plain float64 — no
     quantization, no encryption.  Returns ``(x, history)`` or, with
     ``track_range=True``, ``(x, history, vmax)`` where ``vmax`` is the
     largest magnitude that entered any Gamma quantizer slot (including
-    every re-shared u3 of a streaming family)."""
+    every re-shared u3 of a streaming family and every rejoin re-run).
+
+    ``churn`` (a :class:`~repro.core.churn.ChurnSchedule`) replays the
+    same membership trajectory the protocol drivers walk: departed
+    blocks freeze, rejoins re-run edge setup, and the workload's
+    ``churn_active`` mask gates the global update — so the calibrator's
+    range rehearsal covers churned runs too (fail events rehearse as
+    leaves: the range only depends on which blocks participate)."""
     A = np.asarray(A, np.float64)
     y = np.asarray(y, np.float64)
     N_state, Nk = wl.dims(A, K)
     ys = y / K if y_scale == "consistent" else y
     st = wl.init_state(A, y, ys, K, y_scale=y_scale)
+    active = set(range(K))
+    if churn is not None:
+        churn.check(K, iters)
+        st.aux["churn_active"] = np.ones(K, dtype=bool)
     vmax = 0.0
-    Cs, Bks, u3s = [], [], []
-    for k in range(K):
+
+    def setup_edge(k):
         Q, mu, scale = wl.edge_setup(st, k)
         Bk = np.linalg.inv(Q + mu * np.eye(Nk))
-        C = scale * Bk
-        u3 = wl.share_vector(st, k, Bk)
+        return scale * Bk, Bk, wl.share_vector(st, k, Bk)
+
+    Cs, Bks, u3s = [], [], []
+    for k in range(K):
+        C, Bk, u3 = setup_edge(k)
         Cs.append(C)
         Bks.append(Bk)
         u3s.append(u3)
@@ -362,14 +411,35 @@ def simulate_float(wl: Workload, A: np.ndarray, y: np.ndarray, K: int,
                        float(np.max(np.abs(u3))) if u3.size else 0.0)
     history = np.zeros((iters, N_state))
     for t in range(iters):
+        if churn is not None:
+            for ev in churn.events_at(t):
+                if ev.kind == "rejoin":
+                    active.add(ev.edge)
+                    st.aux["churn_active"][ev.edge] = True
+                    # full init-phase re-run: C_k and u3_k rebuilt from
+                    # the CURRENT state (the generalized reshare contract)
+                    Cs[ev.edge], Bks[ev.edge], u3s[ev.edge] = \
+                        setup_edge(ev.edge)
+                    if track_range:
+                        vmax = max(vmax, float(np.max(np.abs(Cs[ev.edge]))),
+                                   float(np.max(np.abs(u3s[ev.edge])))
+                                   if u3s[ev.edge].size else 0.0)
+                else:  # leave | fail — block frozen either way
+                    active.discard(ev.edge)
+                    st.aux["churn_active"][ev.edge] = False
         if wl.streaming:
             for k in wl.reshare(st, t):
+                if k not in active:
+                    continue        # absent edges miss the refresh
                 u3s[k] = wl.share_vector(st, k, Bks[k])
                 if track_range and u3s[k].size:
                     vmax = max(vmax, float(np.max(np.abs(u3s[k]))))
         x_new = np.zeros(N_state)
         for k in range(K):
             sl = st.sl(k)
+            if k not in active:
+                x_new[sl] = st.x_prev[sl]     # frozen handoff block
+                continue
             u1, u2 = wl.iter_inputs(st, k)
             if track_range:
                 vmax = max(vmax, float(np.max(np.abs(u1))),

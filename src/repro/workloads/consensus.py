@@ -74,18 +74,33 @@ class ConsensusWorkload(Workload):
 
     # -- split-axis contract ----------------------------------------------
     def dims(self, A: np.ndarray, K: int) -> tuple[int, int]:
-        M, N = A.shape
-        if M % K:
-            raise ValueError(f"row split needs K | M ({M} % {K} != 0)")
-        return K * N, N
+        """Row split: block = full model width, state stacks K copies.
+
+        Ragged M is handled internally: ``init_state`` pads A (and y)
+        with zero rows up to K | M' — zero rows are inert in every
+        per-edge quantity (A_k^T A_k, A_k^T y_k, local gradients), so
+        the padded iteration is bit-for-bit the unpadded math."""
+        return K * A.shape[1], A.shape[1]
+
+    def init_state(self, A, y, ys, K,
+                   y_scale: str = "consistent") -> WorkloadState:
+        A = np.asarray(A, np.float64)
+        pad = self._pad_rows(A.shape[0], K) - A.shape[0]
+        if pad:
+            A = np.concatenate([A, np.zeros((pad, A.shape[1]))], axis=0)
+            y = np.concatenate([np.asarray(y, np.float64), np.zeros(pad)])
+            ys = np.concatenate([np.asarray(ys, np.float64), np.zeros(pad)])
+        return super().init_state(A, y, ys, K, y_scale=y_scale)
 
     def row_sl(self, st: WorkloadState, k: int) -> slice:
         Mk = st.A.shape[0] // st.K
         return slice(k * Mk, (k + 1) * Mk)
 
-    def fold_solution(self, x: np.ndarray, K: int) -> np.ndarray:
+    def fold_solution(self, x: np.ndarray, K: int,
+                      n: int | None = None) -> np.ndarray:
         """Average the K full-width copies (all equal at the fixed point)."""
-        return np.asarray(x).reshape(K, -1).mean(axis=0)
+        xm = np.asarray(x).reshape(K, -1).mean(axis=0)
+        return xm if n is None else xm[:n]
 
     def _fold_for_eval(self, A: np.ndarray, x: np.ndarray) -> np.ndarray:
         x = np.asarray(x)
@@ -110,16 +125,35 @@ class ConsensusWorkload(Workload):
 
     # -- consensus global update ------------------------------------------
     def global_update(self, st: WorkloadState, x_new: np.ndarray) -> None:
+        """Aggregate + prox + dual update, folded to the ACTIVE copies.
+
+        Under churn a departed edge's copy leaves the consensus: the
+        aggregate sums only active blocks and the z-prox rescales to the
+        active count (its fixed point is the pooled optimum of the data
+        still present); the departed copy's (z, v) slices freeze with
+        its handoff block and resume on rejoin."""
         K, n = st.K, st.Nk
-        blocks = list((x_new + st.v).reshape(K, n))
+        act = st.aux.get("churn_active")
+        stacked = (x_new + st.v).reshape(K, n)
+        if act is None or act.all():
+            blocks, K_act = list(stacked), K
+        else:
+            blocks = [stacked[k] for k in range(K) if act[k]]
+            K_act = len(blocks)
         ctx = st.aux.get("secure_agg")
         if ctx is None:        # float baseline (simulate_float): plain mean
             total = np.sum(blocks, axis=0)
         else:                  # protocol: the aggregate crosses encrypted
             total = ctx.aggregate(blocks)
-        z = np.asarray(self.prox_consensus(total / K, K))
-        st.v = st.v + x_new - np.tile(z, K)
-        st.z = np.tile(z, K)
+        z = np.asarray(self.prox_consensus(total / K_act, K_act))
+        v_new = st.v + x_new - np.tile(z, K)
+        z_new = np.tile(z, K)
+        if act is not None and not act.all():
+            m = np.repeat(np.asarray(act, bool), n)
+            v_new = np.where(m, v_new, st.v)
+            z_new = np.where(m, z_new, st.z)
+        st.v = v_new
+        st.z = z_new
         st.x_prev = x_new
 
     def prox_consensus(self, u: np.ndarray, K: int) -> np.ndarray:

@@ -24,7 +24,6 @@ class ElasticNetWorkload(Workload):
 
     def make_instance(self, M: int, N: int, K: int,
                       seed: int = 0, **kw) -> WorkloadInstance:
-        assert N % K == 0, "pad N to a multiple of K"
         rng = np.random.default_rng(seed)
         A = rng.normal(0.0, 1.0, (M, N)) / np.sqrt(M)
         k_nz = max(1, int(round(kw.pop("sparsity", 0.2) * N)))

@@ -25,7 +25,6 @@ class LassoWorkload(Workload):
 
     def make_instance(self, M: int, N: int, K: int,
                       seed: int = 0, **kw) -> WorkloadInstance:
-        assert N % K == 0, "pad N to a multiple of K"
         inst = make_lasso(M, N, sparsity=kw.pop("sparsity", 0.1),
                           noise=kw.pop("noise", 0.01), seed=seed)
         return WorkloadInstance(A=inst.A, y=inst.y, x_true=inst.x_true)

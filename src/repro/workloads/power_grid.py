@@ -25,22 +25,24 @@ class PowerGridWorkload(LassoWorkload):
     def make_instance(self, M: int, N: int, K: int,
                       seed: int = 0, **kw) -> WorkloadInstance:
         """N buses, M voltage/current observation rows; the per-bus LASSO
-        instance of ``bus`` (default 0), columns truncated to a multiple
-        of K exactly as the Fig.-10 bench does."""
+        instance of ``bus`` (default 0).  All N buses are kept — the
+        ragged column split pads internally, so the historical
+        truncation to a multiple of K (which silently dropped buses
+        from the reconstruction) is gone."""
         bus = int(kw.pop("bus", 0))
         net = synthetic.make_power_network(
             N, avg_degree=kw.pop("avg_degree", 3.0), T=M, seed=seed)
         inst = synthetic.bus_lasso(net, bus)
-        Npad = N - (N % K)
-        truth = net.adjacency[bus][:Npad].astype(bool)
-        mask = np.ones(Npad, bool)
-        mask[bus if bus < Npad else 0] = False     # exclude the self column
+        truth = net.adjacency[bus].astype(bool)
+        mask = np.ones(N, bool)
+        mask[bus] = False                          # exclude the self column
         return WorkloadInstance(
-            A=inst.A[:, :Npad], y=inst.y, x_true=inst.x_true[:Npad],
+            A=inst.A, y=inst.y, x_true=inst.x_true,
             meta={"bus": bus, "adjacency": truth, "mask": mask})
 
     def metrics(self, inst: WorkloadInstance, x: np.ndarray) -> dict:
         out = super().metrics(inst, x)
+        x = np.asarray(x)[:inst.A.shape[1]]   # strip ragged-split padding
         mask = inst.meta.get("mask")
         truth = inst.meta.get("adjacency")
         if mask is not None and truth is not None:

@@ -1,0 +1,198 @@
+"""ChurnSchedule unit contract: event validation, membership replay,
+canonical constructors, driver-entry checks, and the fail-rejection
+rules (the synchronous drivers have no clock to detect silence with)."""
+import numpy as np
+import pytest
+
+from repro.core import protocol
+from repro.core.churn import KINDS, ChurnEvent, ChurnSchedule
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import make_lasso
+from repro.launch.edge_sim import parse_churn
+from repro.runtime.runner import run_on_runtime
+
+SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+
+
+# ---------------------------------------------------------------------------
+# events
+# ---------------------------------------------------------------------------
+
+def test_event_kind_validated():
+    with pytest.raises(ValueError, match="unknown churn kind"):
+        ChurnEvent(1, 0, "crash")
+    for kind in KINDS:
+        assert ChurnEvent(1, 0, kind).kind == kind
+
+
+def test_event_round_zero_rejected():
+    """Round 0 is the init + share phase — every edge must participate,
+    so churn starts at round 1."""
+    with pytest.raises(ValueError, match=">= 1"):
+        ChurnEvent(0, 0, "leave")
+    with pytest.raises(ValueError, match="negative edge"):
+        ChurnEvent(1, -1, "leave")
+
+
+def test_schedule_accepts_tuples():
+    s = ChurnSchedule(4, [(1, 0, "leave"), (2, 0, "rejoin")])
+    assert s.events == (ChurnEvent(1, 0, "leave"), ChurnEvent(2, 0, "rejoin"))
+
+
+# ---------------------------------------------------------------------------
+# membership replay validation
+# ---------------------------------------------------------------------------
+
+def test_validate_leave_requires_presence():
+    with pytest.raises(ValueError, match="already absent"):
+        ChurnSchedule(4, [(1, 0, "leave"), (2, 0, "leave")])
+    with pytest.raises(ValueError, match="already absent"):
+        ChurnSchedule(4, [(1, 0, "leave"), (2, 0, "fail")])
+
+
+def test_validate_rejoin_requires_absence():
+    with pytest.raises(ValueError, match="never left"):
+        ChurnSchedule(4, [(1, 0, "rejoin")])
+
+
+def test_validate_someone_must_stay():
+    with pytest.raises(ValueError, match="no active edge"):
+        ChurnSchedule(2, [(1, 0, "leave"), (1, 1, "leave")])
+    # the same pair is fine when a third edge stays up
+    ChurnSchedule(3, [(1, 0, "leave"), (1, 1, "leave")])
+
+
+def test_validate_edge_range():
+    with pytest.raises(ValueError, match="out of range"):
+        ChurnSchedule(2, [(1, 2, "leave")])
+
+
+def test_events_within_round_apply_in_list_order():
+    # leave-then-rejoin of the same edge in one round is a valid no-op
+    # sequence; rejoin-then-leave of a present edge is not
+    ChurnSchedule(2, [(1, 0, "leave"), (1, 0, "rejoin")])
+    with pytest.raises(ValueError, match="never left"):
+        ChurnSchedule(2, [(1, 0, "rejoin"), (1, 0, "leave")])
+
+
+# ---------------------------------------------------------------------------
+# accessors
+# ---------------------------------------------------------------------------
+
+def test_events_at_and_counts():
+    s = ChurnSchedule(4, [(1, 0, "leave"), (1, 1, "fail"), (3, 0, "rejoin")])
+    assert [ev.edge for ev in s.events_at(1)] == [0, 1]
+    assert s.events_at(2) == ()
+    assert s.max_round == 3
+    assert s.has_fails
+    assert s.counts() == {"leave": 1, "rejoin": 1, "fail": 1}
+    assert not ChurnSchedule(4, [(1, 0, "leave")]).has_fails
+
+
+def test_check_mismatches():
+    s = ChurnSchedule(4, [(3, 0, "leave")])
+    assert s.check(4, 5) is s
+    with pytest.raises(ValueError, match="built for K=4"):
+        s.check(8, 5)
+    with pytest.raises(ValueError, match="stops after 3"):
+        s.check(4, 3)
+
+
+# ---------------------------------------------------------------------------
+# canonical constructors
+# ---------------------------------------------------------------------------
+
+def test_quarter_schedule_shape():
+    s = ChurnSchedule.quarter(8, 12)
+    assert s.counts() == {"leave": 2, "rejoin": 2, "fail": 0}
+    assert {ev.round for ev in s.events if ev.kind == "leave"} == {4}
+    assert {ev.round for ev in s.events if ev.kind == "rejoin"} == {8}
+    # at least one edge churns even when frac*K rounds to zero, and at
+    # least one edge always stays
+    assert ChurnSchedule.quarter(2, 12).counts()["leave"] == 1
+    assert ChurnSchedule.quarter(2, 12, frac=1.0).counts()["leave"] == 1
+
+
+def test_quarter_fail_kind():
+    s = ChurnSchedule.quarter(4, 9, kind="fail")
+    assert s.has_fails
+    assert s.counts() == {"leave": 0, "rejoin": 1, "fail": 1}
+
+
+def test_quarter_needs_room_to_rejoin():
+    with pytest.raises(ValueError, match="too short"):
+        ChurnSchedule.quarter(4, 2)
+    s = ChurnSchedule.quarter(4, 3)          # minimal legal run: out@1, back@2
+    assert s.max_round == 2
+
+
+def test_random_schedule_deterministic_in_seed():
+    a = ChurnSchedule.random(6, 20, seed=3, rate=0.3, fail_frac=0.5)
+    b = ChurnSchedule.random(6, 20, seed=3, rate=0.3, fail_frac=0.5)
+    assert a.events == b.events
+    c = ChurnSchedule.random(6, 20, seed=4, rate=0.3, fail_frac=0.5)
+    assert a.events != c.events
+    assert a.check(6, 20)                    # replay-valid by construction
+    assert a.max_round < 20
+
+
+# ---------------------------------------------------------------------------
+# driver entry rules
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(K=3, lam=0.05, iters=6, spec=SPEC, cipher="plain", seed=0)
+    base.update(kw)
+    return protocol.ProtocolConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def inst():
+    return make_lasso(16, 24, sparsity=0.1, noise=0.01, seed=1)
+
+
+def test_run_protocol_rejects_fail_schedules(inst):
+    cfg = _cfg(churn=ChurnSchedule(3, [(2, 0, "fail"), (4, 0, "rejoin")]))
+    with pytest.raises(ValueError, match="fail events"):
+        protocol.run_protocol(inst.A, inst.y, cfg)
+
+
+def test_runtime_sync_mode_rejects_fail_schedules(inst):
+    cfg = _cfg(churn=ChurnSchedule.quarter(3, 6, kind="fail"))
+    with pytest.raises(ValueError, match="deadline"):
+        run_on_runtime(inst.A, inst.y, cfg)
+
+
+def test_drivers_check_schedule_fit(inst):
+    wrong_k = ChurnSchedule.quarter(4, 6)
+    with pytest.raises(ValueError, match="K=4"):
+        protocol.run_protocol(inst.A, inst.y, _cfg(churn=wrong_k))
+    too_late = ChurnSchedule(3, [(7, 0, "leave")])
+    with pytest.raises(ValueError, match="stops after"):
+        run_on_runtime(inst.A, inst.y, _cfg(churn=too_late))
+
+
+def test_zero_churn_sections_always_reported(inst):
+    """Churn-free runs still carry a zero-filled churn section, so report
+    diffs and the bench schema never special-case it."""
+    r = protocol.run_protocol(inst.A, inst.y, _cfg(iters=2))
+    assert r.stats["churn"] == {"leaves": 0, "rejoins": 0, "fails": 0,
+                                "deaths": 0, "recycled": 0}
+    rr = run_on_runtime(inst.A, inst.y, _cfg(iters=2))
+    assert rr.stats["churn"] == r.stats["churn"]
+
+
+# ---------------------------------------------------------------------------
+# --churn CLI spec parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_churn_specs():
+    q = parse_churn("quarter", 8, 12, seed=0)
+    assert q.counts() == {"leave": 2, "rejoin": 2, "fail": 0}
+    qf = parse_churn("quarter:fail", 8, 12, seed=0)
+    assert qf.has_fails
+    r = parse_churn("random:0.3:0.5", 6, 20, seed=3)
+    assert r.events == ChurnSchedule.random(6, 20, seed=3, rate=0.3,
+                                            fail_frac=0.5).events
+    with pytest.raises(SystemExit, match="unknown --churn spec"):
+        parse_churn("half", 4, 12, seed=0)

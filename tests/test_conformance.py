@@ -34,6 +34,7 @@ import pytest
 
 from repro import workloads
 from repro.core import cipher_tensor as ctm
+from repro.core.churn import ChurnSchedule
 from repro.core import paillier as gold
 from repro.core import paillier_batch as pb
 from repro.core import protocol
@@ -353,3 +354,126 @@ def test_collaborative_protocol_batched_matches_scalar(inst):
     r_s = protocol.run_protocol(inst.A, inst.y, _cfg(gold_batch=False, **kw))
     assert np.array_equal(r_b.history, r_s.history)
     assert r_b.stats["traffic_bytes"] == r_s.stats["traffic_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# churn conformance matrix (ROADMAP item 5): 25% of the edges leave at
+# iters//3 and rejoin at 2*iters//3, every family, plain + gold arms,
+# both drivers — the fault-injection acceptance grid for the churn engine
+# ---------------------------------------------------------------------------
+
+CHURN_ITERS = 5          # quarter schedule here: leave at t=1, rejoin at t=3
+CHURN_SCHEDULE = ChurnSchedule.quarter(K, CHURN_ITERS)
+
+
+def _churn_case(name, lasso_inst):
+    """Like :func:`_workload_case` but the calibration rehearses the
+    CHURNED membership — the quantization-range contract must cover the
+    trajectory that will actually run, frozen blocks included."""
+    if name == "lasso":
+        return None, lasso_inst, SPEC, {}
+    wl = workloads.get_default(name)
+    n = N // K if name in ROW_SPLIT else N
+    winst = wl.make_instance(24, n, K, seed=1)
+    spec = wl.calibrate_spec(winst.A, winst.y, K, CHURN_ITERS,
+                             churn=CHURN_SCHEDULE)
+    return wl, winst, spec, {"rho": wl.rho, "lam": wl.lam}
+
+
+@pytest.fixture(scope="module", params=WORKLOADS)
+def churn_runs(request, inst):
+    """One family through the quarter schedule: plain (with and without
+    recycled updates) and scalar-gold arms, each through BOTH drivers."""
+    wname = request.param
+    wl, winst, spec, cfg_over = _churn_case(wname, inst)
+    out = {}
+    for arm, cfg in (
+            ("plain", _cfg(cipher="plain")),
+            ("plain_recycle", _cfg(cipher="plain", recycle=True)),
+            ("gold", _cfg(cipher="gold", gold_batch=False, recycle=True)),
+    ):
+        cfg = dataclasses.replace(cfg, workload=wname, spec=spec,
+                                  iters=CHURN_ITERS, churn=CHURN_SCHEDULE,
+                                  **cfg_over)
+        out[arm] = {"proto": protocol.run_protocol(winst.A, winst.y, cfg,
+                                                   workload=wl),
+                    "runtime": run_on_runtime(winst.A, winst.y, cfg,
+                                              workload=wl)}
+    return {"runs": out, "workload": wname}
+
+
+def test_churn_drivers_bit_identical_sync(churn_runs):
+    """Under churn the runtime in sync mode still IS run_protocol: the
+    leave handoff, the rejoin's full init-phase re-run, and the recycled
+    skips land on identical trajectories, reports, and churn telemetry
+    in every arm, for every family."""
+    from repro.obs import metrics
+    for arm, pair in churn_runs["runs"].items():
+        rp, rr = pair["proto"], pair["runtime"]
+        assert np.array_equal(rp.history, rr.history), \
+            (churn_runs["workload"], arm)
+        assert metrics.reports_equal_modulo_timing(rp.stats, rr.stats), \
+            (churn_runs["workload"], arm,
+             metrics.diff_reports(rp.stats, rr.stats))
+        assert metrics.validate_report_core(rp.stats) == []
+        assert rp.stats["churn"]["leaves"] == 1
+        assert rp.stats["churn"]["rejoins"] == 1
+        assert rp.stats["churn"] == rr.stats["churn"]
+
+
+def test_churn_plain_gold_trajectories_match(churn_runs):
+    """Paillier homomorphism stays exact through the handoff: the gold
+    arm's churned trajectory equals the plain integer chain — and the
+    recycled skips (tolerance 0) change NOTHING but the op counts."""
+    runs = churn_runs["runs"]
+    ref = runs["plain"]["proto"]
+    for arm in ("plain_recycle", "gold"):
+        assert np.array_equal(ref.history, runs[arm]["proto"].history), \
+            (churn_runs["workload"], arm)
+    # whether an edge's quantized inputs stalled is arm-independent, so
+    # the priced skip counts agree bit-for-bit too (lasso recycles after
+    # the rejoin — pinned with the limb-residency test below; logistic
+    # and the consensus families keep moving, so they price zero skips)
+    rec = runs["plain_recycle"]["proto"].stats
+    assert rec["churn"]["recycled"] == \
+        runs["gold"]["proto"].stats["churn"]["recycled"]
+    assert runs["plain"]["proto"].stats["churn"]["recycled"] == 0
+
+
+@pytest.mark.parametrize("name,iters,tol", [
+    ("consensus_lasso", 150, 1e-3),
+    ("consensus_logistic", 300, 2e-2),
+])
+def test_churn_consensus_reaches_pooled_optimum(name, iters, tol):
+    """Ye et al. (2003.10615) on our grid: the row-split consensus
+    families fold the departed copy OUT of the aggregate (z-prox rescaled
+    to the active count), so a 25% leave-then-rejoin run still converges
+    to the CENTRALIZED pooled-data optimum, not to a reweighted one."""
+    wl = workloads.get_default(name)
+    winst = wl.make_instance(24, 8, K, seed=1)
+    churn = ChurnSchedule.quarter(K, iters)
+    spec = wl.calibrate_spec(winst.A, winst.y, K, iters, churn=churn)
+    cfg = protocol.ProtocolConfig(K=K, rho=wl.rho, lam=wl.lam, iters=iters,
+                                  spec=spec, cipher="plain", seed=0,
+                                  workload=name, churn=churn)
+    r = protocol.run_protocol(winst.A, winst.y, cfg, workload=wl)
+    ref = wl.reference_solution(winst.A, winst.y, K)
+    folded = wl.fold_solution(r.x, K)
+    assert float(np.max(np.abs(folded - ref))) < tol
+    assert abs(wl.objective(winst.A, winst.y, folded)
+               - wl.objective(winst.A, winst.y, ref)) < 1e-4
+
+
+def test_churn_handoff_stays_limb_resident(inst):
+    """Zero mid-phase CipherTensor conversions through a churn handoff:
+    the rejoin's re-encrypted Gamma_1(u3) enters the next round's
+    eq. (13) chain straight off its resident limbs, and the recycled
+    skips never materialize the cached chain to ints."""
+    ctm.reset_conversion_stats()
+    r = protocol.run_protocol(
+        inst.A, inst.y,
+        _cfg(cipher="gold", gold_batch=True, iters=CHURN_ITERS,
+             churn=CHURN_SCHEDULE, recycle=True))
+    assert ctm.CONVERSIONS == {"to_ints": 0, "from_ints": 0}
+    assert r.stats["churn"]["leaves"] == r.stats["churn"]["rejoins"] == 1
+    assert r.stats["churn"]["recycled"] > 0

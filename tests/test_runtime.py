@@ -1,6 +1,9 @@
 """Edge-network runtime: topology generation, scheduler determinism,
 transport byte accounting vs protocol counters, sync-mode bit-exactness,
-deadline-mode straggler convergence, lossy-link recovery."""
+deadline-mode straggler convergence, lossy-link recovery, churn
+determinism + silent-failure detection, recycled-update launch skips."""
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -438,3 +441,119 @@ def test_streaming_reshare_survives_jitter_and_drops():
     clean = run_on_runtime(winst.A, winst.y, cfg, workload=wl)
     assert np.all(np.isfinite(r.history))
     assert float(np.max(np.abs(r.x - clean.x))) < 0.5
+
+
+# ---------------------------------------------------------------------------
+# churn on the runtime: determinism, fail detection, recycled launches
+# ---------------------------------------------------------------------------
+
+def _span_names(trace, cat):
+    """name -> count over one category of a timing-free trace signature."""
+    out = {}
+    for e in trace:
+        if e[1] == cat:
+            out[e[0]] = out.get(e[0], 0) + 1
+    return out
+
+
+def test_churn_deterministic_span_stream_under_jitter_loss_and_hold():
+    """Churn (leave + rejoin) on a streaming workload with jitter, drops,
+    retransmits and auto-hold all enabled: two identical runs replay the
+    exact same timing-free span stream — every churn event emits its own
+    ``churn``-category span and the counts reconcile with the RunReport's
+    churn section and the surviving re-shares."""
+    from repro.core.churn import ChurnSchedule
+    wl, winst = _streaming_pair(segments=3)
+    churn = ChurnSchedule.quarter(3, 8)       # leave t=2, rejoin t=5
+    cfg = protocol.ProtocolConfig(K=3, lam=0.05, iters=8, spec=SPEC,
+                                  cipher="plain", seed=0,
+                                  workload="streaming_lasso",
+                                  churn=churn, recycle=True)
+    link = LinkModel(jitter_s=2e-3, drop_prob=0.05, timeout_s=5e-3)
+    runs = [run_on_runtime(winst.A, winst.y, cfg, workload=wl, link=link,
+                           coalesce_hold_ticks="auto", tick_s=1e-3,
+                           trace=True) for _ in range(2)]
+    r0, r1 = (r.stats["runtime"] for r in runs)
+    assert r0["trace"] == r1["trace"]
+    assert np.array_equal(runs[0].history, runs[1].history)
+    assert r0["retransmits"] == r1["retransmits"] > 0
+    ch = runs[0].stats["churn"]
+    spans = _span_names(r0["trace"], "churn")
+    assert spans.get("churn:leave", 0) == ch["leaves"] == 1
+    assert spans.get("churn:rejoin", 0) == ch["rejoins"] == 1
+    assert spans.get("churn:recycle", 0) == ch["recycled"]
+    assert ch["fails"] == ch["deaths"] == 0
+    # the absent edge (out t=2..4) misses BOTH segment re-share rounds
+    # (t=2, t=4); everyone else's re-shares survive the lossy links and
+    # each emits a span
+    reshares = sum(_span_names(r0["trace"], "reshare").values())
+    assert reshares == runs[0].stats["reshare_events"] == 4
+
+
+def test_failed_edge_is_detected_and_declared_dead(inst):
+    """A silent crash (no goodbye): the master's deadline machinery
+    substitutes the stale cached block while it lasts, then probes, then
+    declares the edge dead and folds it out — all visible as ``churn``
+    spans, and deterministic across identical runs."""
+    from repro.core.churn import ChurnSchedule
+    churn = ChurnSchedule(3, [(2, 0, "fail")])
+    cfg = _cfg(iters=12, deadline=1.0, churn=churn,
+               latency_fn=lambda k, t: 0.0)
+    runs = [run_on_runtime(inst.A, inst.y, cfg, trace=True)
+            for _ in range(2)]
+    r0, r1 = (r.stats["runtime"] for r in runs)
+    assert r0["trace"] == r1["trace"]
+    assert np.array_equal(runs[0].history, runs[1].history)
+    ch = runs[0].stats["churn"]
+    assert ch["fails"] == 1
+    assert ch["deaths"] == 1                  # no rejoin came to the rescue
+    spans = _span_names(r0["trace"], "churn")
+    assert spans.get("churn:fail", 0) == 1
+    assert spans.get("churn:dead", 0) == 1
+    # between the crash and the declaration the master rode the cache
+    assert runs[0].stale_events > 0
+    assert np.all(np.isfinite(runs[0].history))
+    # after the declaration the dead block is frozen, the rest converges
+    assert np.array_equal(runs[0].history[-1, :16], runs[0].history[-2, :16])
+    assert not np.array_equal(runs[0].history[-1, 16:],
+                              runs[0].history[-2, 16:])
+
+
+def test_rejoin_beats_the_probe_chain(inst):
+    """A fail whose edge rejoins before ``fail_detect`` silent probes
+    elapse is NEVER declared dead — the rejoin re-runs the init phase and
+    the edge resumes (the crash cost bounded staleness, not membership)."""
+    from repro.core.churn import ChurnSchedule
+    churn = ChurnSchedule.quarter(3, 9, kind="fail")   # fail t=3, back t=6
+    cfg = _cfg(iters=9, deadline=1.0, churn=churn,
+               latency_fn=lambda k, t: 0.0)
+    r = run_on_runtime(inst.A, inst.y, cfg)
+    ch = r.stats["churn"]
+    assert ch == {"leaves": 0, "rejoins": 1, "fails": 1, "deaths": 0,
+                  "recycled": 0}
+    assert r.stale_events > 0                 # the silence was bridged
+    assert np.all(np.isfinite(r.history))
+
+
+def test_recycled_updates_skip_launches(inst):
+    """Zhang et al. 1910.04581 on the runtime: once an edge's quantized
+    inputs stall, recycled mode reuses the cached decrypted chain — the
+    enc ops, the kernel launches, and the upload bytes all drop, and at
+    tolerance 0 the trajectory is bit-identical to the full run."""
+    cfg = _cfg(iters=30)
+    full = run_on_runtime(inst.A, inst.y, cfg)
+    rec = run_on_runtime(inst.A, inst.y,
+                         dataclasses.replace(cfg, recycle=True))
+    assert np.array_equal(full.history, rec.history)
+    n_rec = rec.stats["churn"]["recycled"]
+    assert n_rec > 0
+    assert full.stats["churn"]["recycled"] == 0
+    rt_full, rt_rec = full.stats["runtime"], rec.stats["runtime"]
+    assert rt_rec["launches"] < rt_full["launches"]
+    assert rt_rec["coalesced_ops"] < rt_full["coalesced_ops"]
+    # a skipped edge-round neither uploads its pair nor downloads a reply
+    for d in ("edge->master", "master->edge"):
+        assert rec.stats["traffic_bytes"][d] < full.stats["traffic_bytes"][d]
+    # the skip is priced, not hidden: the iterate phase records one
+    # 'recycled' op per skipped coefficient (nk = 16 per edge-round)
+    assert rec.stats["ops"]["iterate"]["recycled"] == n_rec * 16

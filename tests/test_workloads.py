@@ -120,7 +120,9 @@ def test_logistic_reaches_centralized_optimum():
 def test_power_grid_recovers_topology():
     wl = _wl("power_grid")
     inst = wl.make_instance(160, 34, 4, seed=0)
-    assert inst.A.shape[1] % 4 == 0
+    # every bus is kept: the ragged column split pads internally instead
+    # of truncating the network to a multiple of K (34 buses, K=4)
+    assert inst.A.shape[1] == 34            # 34 % 4 != 0: ragged is fine
     x, _ = simulate_float(wl, inst.A, inst.y, 4, 200)
     assert wl.metrics(inst, x)["auroc"] > 0.8
 
@@ -208,18 +210,20 @@ def test_vec_protocol_big_delta_matches_plain():
 # ---------------------------------------------------------------------------
 
 def test_row_split_dims_contract():
-    """Row split: block width = model width, state stacks K copies, and
-    the divisibility requirement moves from N to M (each edge owns an
-    equal row block)."""
+    """Row split: block width = model width, state stacks K copies.
+    Ragged shapes no longer raise — both split axes pad internally
+    (zero rows on the row split, zero columns on the column split)."""
     wl = _wl("consensus_lasso")
     inst = wl.make_instance(36, 10, 4, seed=0)     # M padded 36 -> 36
     assert inst.A.shape[0] % 4 == 0
     assert wl.dims(inst.A, 4) == (40, 10)
-    with pytest.raises(ValueError, match="row split needs"):
-        wl.dims(np.zeros((10, 6)), 4)
-    # column split unchanged: N divisibility still enforced
-    with pytest.raises(ValueError, match="column split needs"):
-        _wl("lasso").dims(np.zeros((8, 10)), 4)
+    # ragged M: dims unchanged (padding is init_state's business) and
+    # the padded state carries whole row blocks
+    assert wl.dims(np.zeros((10, 6)), 4) == (24, 6)
+    st = wl.init_state(np.zeros((10, 6)), np.zeros(10), np.zeros(10), 4)
+    assert st.A.shape[0] == 12 and st.y.size == 12
+    # ragged N on the column split: block = ceil(N/K), state padded
+    assert _wl("lasso").dims(np.zeros((8, 10)), 4) == (12, 3)
 
 
 def test_consensus_edges_hold_own_rows():
@@ -426,3 +430,77 @@ def test_consensus_calibration_covers_aggregate_slot():
                                 spec=spec, cipher="plain", seed=0),
         workload=wl)
     assert float(np.max(np.abs(r.x - xf))) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# ragged splits: non-divisible (M, N, K) run through every family
+# ---------------------------------------------------------------------------
+
+#: deliberately indivisible (M, N, K) triples — gcd(N, K) = 1 on the
+#: column axis and M % K != 0 on the row axis
+RAGGED_SHAPES = [(17, 11, 3), (23, 13, 4), (19, 9, 5)]
+
+
+@given(st.integers(0, 10_000), st.sampled_from(NAMES),
+       st.sampled_from(RAGGED_SHAPES))
+def test_ragged_split_protocol_tracks_float(seed, name, shape):
+    """Every family accepts non-divisible (M, N, K): the internal
+    padding is invisible — dims follow the ceil contract, the quantized
+    protocol tracks the float baseline, fold_solution returns the model
+    width, and a column split's padded coordinates sit at exactly 0 in
+    the float rehearsal (zero column + mu-regularized solve)."""
+    M, N, K = shape
+    wl = _wl(name)
+    inst = wl.make_instance(M, N, K, seed=seed)
+    A, y = inst.A, inst.y
+    if wl.split == "row" and A.shape[0] % K == 0:
+        A, y = A[:-1], y[:-1]       # make_instance pads M; un-pad to
+        # exercise init_state's zero-row path
+    n = A.shape[1]
+    N_state, Nk = wl.dims(A, K)
+    assert N_state == K * Nk
+    assert Nk == (n if wl.split == "row" else -(-n // K))
+    iters = 6
+    spec = wl.calibrate_spec(A, y, K, iters)
+    xf, _ = simulate_float(wl, A, y, K, iters)
+    if wl.split == "column" and N_state > n:
+        assert np.array_equal(xf[n:], np.zeros(N_state - n))
+    r = protocol.run_protocol(
+        A, y,
+        protocol.ProtocolConfig(K=K, rho=wl.rho, lam=wl.lam, iters=iters,
+                                spec=spec, cipher="plain", seed=0),
+        workload=wl)
+    assert float(np.max(np.abs(r.x - xf))) < 1e-2
+    folded = wl.fold_solution(r.x, K, n)
+    assert folded.shape == (n,)
+    assert np.isfinite(wl.objective(A, y, folded))
+
+
+def test_consensus_row_padding_is_bit_inert():
+    """Zero observation rows are algebraically inert in every per-edge
+    quantity (A_k^T A_k, A_k^T y_k): padding M up to K | M' reproduces
+    the unpadded trajectory bit-for-bit, not approximately."""
+    wl = _wl("consensus_lasso")
+    inst = wl.make_instance(16, 8, 4, seed=7)
+    A, y = inst.A[:-2], inst.y[:-2]              # M = 14, K = 4
+    Apad = np.vstack([A, np.zeros((2, 8))])
+    ypad = np.concatenate([y, np.zeros(2)])
+    x1, h1 = simulate_float(wl, A, y, 4, 8)
+    x2, h2 = simulate_float(wl, Apad, ypad, 4, 8)
+    assert np.array_equal(h1, h2)
+    assert np.array_equal(x1, x2)
+
+
+def test_ragged_column_fold_strips_padding_only():
+    """fold_solution(x, K, n) is a pure slice on the column split and an
+    average-then-slice on the row split — it never mixes padded
+    coordinates into real ones."""
+    x = np.arange(12, dtype=np.float64)
+    lasso = _wl("lasso")
+    assert np.array_equal(lasso.fold_solution(x, 3, 10), x[:10])
+    assert np.array_equal(lasso.fold_solution(x, 3), x)
+    cons = _wl("consensus_lasso")
+    assert np.array_equal(cons.fold_solution(x, 3),
+                          x.reshape(3, 4).mean(axis=0))
+    assert np.array_equal(cons.fold_solution(x, 3, 2),
+                          x.reshape(3, 4).mean(axis=0)[:2])
