@@ -145,6 +145,76 @@ def _op_micro(rows: list) -> dict:
     return out
 
 
+def _reduce_impl_micro(rows: list) -> dict:
+    """Montgomery vs Barrett at the kernel boundary, same operands both arms.
+
+    Times ``ops.mulmod`` (always Barrett — the domain enter/leave
+    conversions don't amortize over a single product, so there is no
+    Montgomery arm to race) plus the variable-exponent ladder
+    (``ops.modexp``) and the host-known fixed-window ladder
+    (``ops.modexp_fixed``) under each ``reduce_impl``, on the CRT
+    half-space modulus the protocol actually launches on (p^2 of the
+    ``GOLD_KEY_BITS`` key) at batch ``GOLD_BATCH`` — the K=128 coalesced
+    width.  Every arm is checked bit-exact against Python-int ``pow`` on
+    the same operands; ``scripts/check_bench_schema.py`` FAILS the bench
+    if an arm lost exactness or Montgomery lost the race.
+    """
+    import jax.numpy as jnp
+    from repro.core import bigint as bi
+    from repro.kernels import ops as kops
+
+    key = gold.keygen(GOLD_KEY_BITS, random.Random(7))
+    pack = pb.make_batch_key(key).vk.pack_p2
+    rng = random.Random(11)
+    B = GOLD_BATCH
+    bases = [rng.randrange(1, pack.m_int) for _ in range(B)]
+    exps = [rng.randrange(1 << 21) for _ in range(B)]   # Gamma_2-width
+    e_fix = key.n % pack.m_int                          # key-constant width
+    b16 = jnp.asarray(bi.from_ints(bases, pack.L16))
+    le = max(1, max(bi.n_limbs_for(e) for e in exps))
+    e16 = jnp.asarray(bi.from_ints(exps, le))
+    want = {
+        "mulmod": [b * b % pack.m_int for b in bases],
+        "modexp": [pow(b, e, pack.m_int) for b, e in zip(bases, exps)],
+        "modexp_fixed": [pow(b, e_fix, pack.m_int) for b in bases],
+    }
+
+    def launch(op, impl):
+        if op == "mulmod":
+            return kops.mulmod(b16, b16, pack, backend="ref")
+        if op == "modexp":
+            return kops.modexp(b16, e16, pack, backend="ref",
+                               reduce_impl=impl)
+        return kops.modexp_fixed(b16, e_fix, pack, backend="ref",
+                                 reduce_impl=impl)
+
+    out = {"batch": B, "key_bits": GOLD_KEY_BITS,
+           "modulus_bits": pack.m_int.bit_length(),
+           "ops": {}}
+    for op in ("mulmod", "modexp", "modexp_fixed"):
+        arms = ("barrett",) if op == "mulmod" \
+            else ("barrett", "montgomery")
+        per = {}
+        for impl in arms:
+            t = timeit(lambda: launch(op, impl).block_until_ready(),
+                       repeat=5)
+            per[impl] = {"wall_s": float(t),
+                         "bit_exact": bi.to_ints(launch(op, impl))
+                         == want[op],
+                         "timing": t.as_dict()}
+        entry = dict(per)
+        if "montgomery" in per:
+            entry["speedup_montgomery_vs_barrett"] = (
+                per["barrett"]["wall_s"] / per["montgomery"]["wall_s"])
+            emit(rows, f"topo_reduce_impl_{op}",
+                 per["montgomery"]["wall_s"] / B,
+                 derived="speedup_vs_barrett="
+                         f"{entry['speedup_montgomery_vs_barrett']:.3f};"
+                         f"bit_exact={per['montgomery']['bit_exact']}")
+        out["ops"][op] = entry
+    return out
+
+
 def _gold_protocol_speedup(rows: list, inst) -> dict:
     """K=128 star with the REAL gold cipher: batched vs. scalar wall-clock.
 
@@ -199,6 +269,9 @@ def _gold_protocol_speedup(rows: list, inst) -> dict:
         "batched_wall_s": runs[True][0][-1],
         "scalar_wall_s": runs[False][0][-1],
         "speedup_vs_scalar": speedup, "bit_exact": bit_exact,
+        # achieved-vs-peak limb-ops priced by the ACTIVE ladder schedule
+        # (method + reduce_impl) — the corrected roofline accounting
+        "roofline": runs[True][1].stats["runtime"].get("roofline"),
         "host_conversions": conversions,
         "coalesced_ops": runs[True][1].stats["runtime"]["coalesced_ops"],
         "launches": runs[True][1].stats["runtime"]["launches"],
@@ -269,6 +342,7 @@ def run(rows: list) -> None:
     gold_fastpath = {
         "batch": GOLD_BATCH,
         "ops": _op_micro(rows),
+        "reduce_impl": _reduce_impl_micro(rows),
         "protocol_star": _gold_protocol_speedup(rows, inst_l),
         "compile_cache": _compile_cache_cold_warm(rows),
         "note": ("speedup_vs_scalar < 1 means the scalar Python-int path "

@@ -32,6 +32,8 @@ BENCHES = [
      "power-network reconstruction AUROC/AUPRC (Fig. 10)"),
     ("roofline", "bench_roofline",
      "roofline rows from the dry-run report (deliverable g)"),
+    ("kernels", "bench_kernels",
+     "limb-kernel micro: Barrett vs Montgomery ladders, bit-exact gate"),
     ("topo", "bench_topology",
      "topology x K sweep (K<=128) + batched-gold speedup (beyond-paper)"),
     ("workloads", "bench_workloads",

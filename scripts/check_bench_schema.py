@@ -70,6 +70,50 @@ def _check_recycled_row(doc, path) -> list[str]:
     return errors
 
 
+def _check_gold_fastpath(doc, path) -> list[str]:
+    """The gold_fastpath section's own invariants (BENCH_topology).
+
+    * ``protocol_star.bit_exact`` must be present and true — the batched
+      arm (whatever ``REPRO_REDUCE_IMPL`` produced it) must replay the
+      scalar gold protocol history bit-identically;
+    * every ``reduce_impl`` arm must record ``bit_exact: true`` against
+      the Python-int gold on the same operands;
+    * Montgomery must not LOSE to Barrett on the K=128-width ladder
+      races (``speedup_montgomery_vs_barrett >= 1``) — a slower REDC
+      means the kernels regressed (or the constants stopped being
+      precomputed) and the default ``reduce_impl`` is hurting.
+    """
+    gf = doc.get("gold_fastpath")
+    if gf is None:          # other BENCH_* artifacts don't carry it
+        return []
+    errors = []
+    star = gf.get("protocol_star", {})
+    if star.get("bit_exact") is not True:
+        errors.append(f"{path}: gold_fastpath.protocol_star.bit_exact "
+                      f"is {star.get('bit_exact')!r} (batched protocol "
+                      "history must replay scalar gold bit-identically)")
+    ri = gf.get("reduce_impl")
+    if ri is None:
+        errors.append(f"{path}: gold_fastpath missing reduce_impl "
+                      "section (regenerate: python -m benchmarks.run "
+                      "--only topo)")
+        return errors
+    for op, entry in ri.get("ops", {}).items():
+        for impl in ("barrett", "montgomery"):
+            arm = entry.get(impl)
+            if arm is None:
+                continue
+            if arm.get("bit_exact") is not True:
+                errors.append(f"{path}: gold_fastpath.reduce_impl "
+                              f"{op}/{impl} missing or failing bit_exact")
+        speed = entry.get("speedup_montgomery_vs_barrett")
+        if speed is not None and speed < 1.0:
+            errors.append(f"{path}: Montgomery slower than Barrett on "
+                          f"{op} at the K=128 batch width "
+                          f"(speedup={speed:.3f} < 1)")
+    return errors
+
+
 def check_bench(path: pathlib.Path) -> list[str]:
     from benchmarks.common import BENCH_SCHEMA_VERSION
     from repro.obs.metrics import validate_report_core
@@ -88,6 +132,7 @@ def check_bench(path: pathlib.Path) -> list[str]:
     for where, report in _iter_reports(doc):
         errors.extend(validate_report_core(report, f"{path}:{where}"))
     errors.extend(_check_recycled_row(doc, path))
+    errors.extend(_check_gold_fastpath(doc, path))
     return errors
 
 

@@ -147,47 +147,96 @@ PEAK_LIMB_MULS_PER_S = 4e9
 GAMMA2_EXP_BITS = 20           # typical Gamma_2 exponent width (~log2 Delta)
 
 
+def _active_method() -> str:
+    import os
+    return os.environ.get("REPRO_MODEXP_METHOD", "win4")
+
+
+def _active_reduce_impl() -> str:
+    import os
+    return os.environ.get("REPRO_REDUCE_IMPL", "montgomery")
+
+
+def ladder_mulmods(method: str, exp_bits: int,
+                   reduce_impl: str = "barrett") -> float:
+    """Executed mulmods for one ModExp under the active ladder schedule.
+
+    * ``binary`` — the constant-time Algorithm-2 ladder executes BOTH the
+      squaring and the selected multiply every bit: ``2/bit``;
+    * ``win4`` — 4 squarings + 1 oblivious table select per 4-bit window
+      plus the 15-mulmod power table: ``1.25/bit + 15``;
+    * ``fixed`` — the batch-shared host-known-exponent ladder
+      (``ops.modexp_fixed``): same window schedule as win4 over the
+      exponent's TRUE bit-length (leading zero windows trimmed host-side).
+
+    ``reduce_impl="montgomery"`` adds the 2 domain enter/leave
+    REDC-equivalents (amortized over the ladder, but executed).
+    """
+    if method == "binary":
+        n = 2.0 * exp_bits
+    elif method in ("win4", "fixed"):
+        n = 1.25 * exp_bits + 15.0 if exp_bits > 0 else 0.0
+    else:
+        raise ValueError(f"unknown modexp method {method!r}")
+    if reduce_impl == "montgomery" and n > 0:
+        n += 2.0
+    return n
+
+
 def limb_ops(ops: dict, key_bits: int,
-             exp_bits: int = GAMMA2_EXP_BITS) -> dict:
+             exp_bits: int = GAMMA2_EXP_BITS,
+             method: str | None = None,
+             reduce_impl: str | None = None) -> dict:
     """16-bit limb-multiplications implied by an OpCounter ``ops`` dict.
 
     ``ops`` is the RunReport ``"ops"`` section: ``{phase: {op: count}}``.
     Ciphertexts live mod n^2, i.e. ``L = ceil(2*key_bits / 16)`` limbs.
-    Schoolbook costs per op:
+    Schoolbook costs per op, priced by the ACTIVE ladder schedule
+    (``method`` defaults to ``$REPRO_MODEXP_METHOD``/win4 and
+    ``reduce_impl`` to ``$REPRO_REDUCE_IMPL``/montgomery — the same
+    defaults ``kernels/ops.py`` resolves, so the accounting tracks what
+    actually ran):
 
     * ``mulmod``  — one LxL product: ``L^2``;
-    * ``modexp``  — square-and-multiply over an ``exp_bits``-bit exponent:
-      ``~1.5 * exp_bits * L^2`` (squares always, multiplies half the time);
-    * ``enc``/``dec`` — one full-width exponentiation (r^n, resp. c^phi):
-      ``~1.5 * key_bits * L^2``.
+    * ``modexp``  — :func:`ladder_mulmods`(method, exp_bits) ``* L^2``;
+    * ``enc``/``dec`` — one full-width exponentiation (r^n, resp. c^phi)
+      with a key-constant exponent, so the fixed-window schedule applies:
+      :func:`ladder_mulmods`("fixed", key_bits) ``* L^2``.
     """
+    method = method or _active_method()
+    reduce_impl = reduce_impl or _active_reduce_impl()
     L = max(1, -(-2 * key_bits // LIMB_BITS))
     totals: dict[str, int] = {}
     for per_phase in ops.values():
         for op, n in per_phase.items():
             totals[op] = totals.get(op, 0) + int(n)
+    key_exp = ladder_mulmods("fixed", key_bits, reduce_impl)
     per_op = {
-        "modexp": 1.5 * exp_bits * L * L,
+        "modexp": ladder_mulmods(method, exp_bits, reduce_impl) * L * L,
         "mulmod": float(L * L),
-        "enc": 1.5 * key_bits * L * L,
-        "dec": 1.5 * key_bits * L * L,
+        "enc": key_exp * L * L,
+        "dec": key_exp * L * L,
     }
     by_op = {op: totals.get(op, 0) * per_op[op]
              for op in per_op if totals.get(op)}
     return {"key_bits": key_bits, "limbs": L, "exp_bits": exp_bits,
+            "method": method, "reduce_impl": reduce_impl,
             "by_op": by_op, "limb_muls": sum(by_op.values())}
 
 
 def achieved_vs_peak(ops: dict, key_bits: int, seconds: float,
                      peak: float = PEAK_LIMB_MULS_PER_S,
-                     exp_bits: int = GAMMA2_EXP_BITS) -> dict:
+                     exp_bits: int = GAMMA2_EXP_BITS,
+                     method: str | None = None,
+                     reduce_impl: str | None = None) -> dict:
     """Achieved limb-mul rate over ``seconds`` vs the assumed device peak.
 
     ``seconds`` may be wall or virtual time — a RunReport built on the
     simulated clock reports utilization *of the modeled device*, which is
     the number the paper's speedup-ratio evaluation compares.
     """
-    lo = limb_ops(ops, key_bits, exp_bits=exp_bits)
+    lo = limb_ops(ops, key_bits, exp_bits=exp_bits, method=method,
+                  reduce_impl=reduce_impl)
     rate = lo["limb_muls"] / seconds if seconds > 0 else 0.0
     lo.update(seconds=seconds, peak_limb_muls_per_s=peak,
               limb_muls_per_s=rate,

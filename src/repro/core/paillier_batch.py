@@ -48,6 +48,7 @@ import time
 from typing import Sequence
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from . import bigint as bi
@@ -94,6 +95,31 @@ def rand_r_vec(key: gold.PaillierKey, count: int,
 # Core primitive: batched base^e mod n^2 via the CRT half spaces
 # ---------------------------------------------------------------------------
 
+def _shard_batch(*arrays):
+    """Lay ``(B, ...)`` operand arrays across the local ``batch`` device mesh.
+
+    Single-device hosts (the common container) get the arrays back
+    untouched.  On multi-chip hosts every limb kernel is batch-elementwise,
+    so placing the leading axis on :func:`repro.launch.mesh.kernel_mesh`
+    BEFORE the jitted CRT body runs lets XLA partition the whole ladder —
+    K>=64 topologies use every chip with zero cross-device traffic until
+    the caller gathers.  Batches not divisible by the device count stay
+    unsharded (the jit still runs, just unpartitioned).
+    """
+    from ..launch import mesh as mesh_mod
+    m = mesh_mod.kernel_mesh()
+    if m is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        ndev = int(m.devices.size)
+        sh = NamedSharding(m, PartitionSpec("batch"))
+        arrays = tuple(
+            jax.device_put(x, sh)
+            if (getattr(x, "ndim", 0) or np.ndim(x)) >= 1
+            and np.shape(x)[0] and np.shape(x)[0] % ndev == 0 else x
+            for x in (jnp.asarray(a) for a in arrays))
+    return arrays if len(arrays) != 1 else arrays[0]
+
+
 def _norm_exps(exps, batch: int) -> list[int]:
     if isinstance(exps, (int, np.integer)):
         exps = [int(exps)] * batch
@@ -105,16 +131,25 @@ def _norm_exps(exps, batch: int) -> list[int]:
 
 
 def modexp_crt_limbs(bk: BatchKey, bases: Sequence[int], exps,
-                     backend: str | None = None) -> jnp.ndarray:
+                     backend: str | None = None,
+                     fixed: bool = False) -> jnp.ndarray:
     """[b^e mod n^2] as (B, L16(n^2)) limbs; ``exps`` scalar or per-element.
 
     The two half-space ModExp launches size their exponent limbs to the
     batch maximum AFTER the phi reduction, so small exponents (quantized
     Gamma_2 values, ~20 bits) pay for ~2 limbs, not the full key width.
+
+    ``fixed=True`` opts a SCALAR exponent into the host-known fixed-window
+    ladder (``ops.modexp_fixed``): the 4-bit schedule is baked into the
+    trace, dropping the per-window oblivious table select.  Only pass it
+    for KEY-CONSTANT exponents (enc's ``n``, dec's ``lam``) — every
+    distinct exponent value compiles its own executable.  Per-element
+    exponent lists ignore the flag.
     """
     key, vk = bk.key, bk.vk
     B = len(bases)
     bases = [int(b) for b in bases]
+    scalar_e = int(exps) if isinstance(exps, (int, np.integer)) else None
     exps = _norm_exps(exps, B)
     for i, e in enumerate(exps):
         if e < 0:   # pow()-compatible: invert the base (egcd), negate e
@@ -122,9 +157,25 @@ def modexp_crt_limbs(bk: BatchKey, bases: Sequence[int], exps,
             exps[i] = -e
     ep = [e % key.phi_p2 for e in exps]
     eq = [e % key.phi_q2 for e in exps]
-    le = max(1, max(bi.n_limbs_for(e) for e in ep + eq))
     bp = bi.from_ints([b % key.p2 for b in bases], vk.pack_p2.L16)
     bq = bi.from_ints([b % key.q2 for b in bases], vk.pack_q2.L16)
+
+    if fixed and scalar_e is not None:
+        ep_s, eq_s = abs(scalar_e) % key.phi_p2, abs(scalar_e) % key.phi_q2
+
+        def fixed_body(bp, bq):
+            xp = ops.modexp_fixed(bp, ep_s, vk.pack_p2, backend=backend)
+            xq = ops.modexp_fixed(bq, eq_s, vk.pack_q2, backend=backend)
+            return pv.crt_combine_batch(vk, xp, xq, backend=backend)
+
+        # the reduce impl resolves when the body TRACES, so it is part of
+        # the cache identity — else flipping REPRO_REDUCE_IMPL mid-process
+        # would silently replay the other impl's executable
+        fn = pv._cached_jit(vk, ("crt_modexp_fixed", backend, ep_s, eq_s,
+                                 ops.active_reduce_impl()), fixed_body)
+        return fn(*_shard_batch(bp, bq))
+
+    le = max(1, max(bi.n_limbs_for(e) for e in ep + eq))
 
     def body(bp, ep, bq, eq):
         # the whole half-space ladder + eq. (38) recombination compiles to
@@ -134,13 +185,15 @@ def modexp_crt_limbs(bk: BatchKey, bases: Sequence[int], exps,
         xq = ops.modexp(bq, eq, vk.pack_q2, backend=backend)
         return pv.crt_combine_batch(vk, xp, xq, backend=backend)
 
-    fn = pv._cached_jit(vk, f"crt_modexp_{backend}", body)
-    return fn(jnp.asarray(bp), jnp.asarray(bi.from_ints(ep, le)),
-              jnp.asarray(bq), jnp.asarray(bi.from_ints(eq, le)))
+    fn = pv._cached_jit(
+        vk, ("crt_modexp", backend, ops.active_reduce_impl()), body)
+    return fn(*_shard_batch(bp, bi.from_ints(ep, le),
+                            bq, bi.from_ints(eq, le)))
 
 
 def modexp_crt_limbs_in(bk: BatchKey, base_limbs: jnp.ndarray, exps,
-                        backend: str | None = None) -> jnp.ndarray:
+                        backend: str | None = None,
+                        fixed: bool = False) -> jnp.ndarray:
     """:func:`modexp_crt_limbs` for bases already resident in limb form.
 
     ``base_limbs`` is a ``(B, L16(n^2))`` array (a :class:`CipherTensor`'s
@@ -148,13 +201,31 @@ def modexp_crt_limbs_in(bk: BatchKey, base_limbs: jnp.ndarray, exps,
     (``paillier_vec._reduce_into``), so no host int<->limb conversion runs
     at all.  Exponents must be nonnegative (negative exponents need a
     host-side base inversion — callers materialize for that rare path).
+    ``fixed`` as in :func:`modexp_crt_limbs` (scalar exponents only).
     """
     vk = bk.vk
     key = bk.key
     B = int(base_limbs.shape[0])
+    scalar_e = int(exps) if isinstance(exps, (int, np.integer)) else None
     exps = _norm_exps(exps, B)
     if any(e < 0 for e in exps):
         raise ValueError("limb-resident ModExp needs nonnegative exponents")
+
+    if fixed and scalar_e is not None:
+        ep_s, eq_s = scalar_e % key.phi_p2, scalar_e % key.phi_q2
+
+        def fixed_body(c):
+            cp = pv._reduce_into(c, vk.pack_p2, backend)
+            cq = pv._reduce_into(c, vk.pack_q2, backend)
+            xp = ops.modexp_fixed(cp, ep_s, vk.pack_p2, backend=backend)
+            xq = ops.modexp_fixed(cq, eq_s, vk.pack_q2, backend=backend)
+            return pv.crt_combine_batch(vk, xp, xq, backend=backend)
+
+        fn = pv._cached_jit(
+            vk, ("crt_modexp_limbs_fixed", backend, ep_s, eq_s,
+                 ops.active_reduce_impl()), fixed_body)
+        return fn(_shard_batch(base_limbs))
+
     ep = [e % key.phi_p2 for e in exps]
     eq = [e % key.phi_q2 for e in exps]
     le = max(1, max(bi.n_limbs_for(e) for e in ep + eq))
@@ -166,43 +237,55 @@ def modexp_crt_limbs_in(bk: BatchKey, base_limbs: jnp.ndarray, exps,
         xq = ops.modexp(cq, eq, vk.pack_q2, backend=backend)
         return pv.crt_combine_batch(vk, xp, xq, backend=backend)
 
-    fn = pv._cached_jit(vk, f"crt_modexp_limbs_{backend}", body)
-    return fn(base_limbs, jnp.asarray(bi.from_ints(ep, le)),
-              jnp.asarray(bi.from_ints(eq, le)))
+    fn = pv._cached_jit(
+        vk, ("crt_modexp_limbs", backend, ops.active_reduce_impl()), body)
+    return fn(*_shard_batch(base_limbs, bi.from_ints(ep, le),
+                            bi.from_ints(eq, le)))
 
 
 def modexp_crt_vec(bk: BatchKey, bases: Sequence[int], exps,
-                   backend: str | None = None) -> list[int]:
+                   backend: str | None = None,
+                   fixed: bool = False) -> list[int]:
     """Int-in/int-out batched ``pow(b, e, n^2)`` (see modexp_crt_limbs)."""
     if not len(bases):
         return []
-    return bi.to_ints(modexp_crt_limbs(bk, bases, exps, backend=backend))
+    return bi.to_ints(modexp_crt_limbs(bk, bases, exps, backend=backend,
+                                       fixed=fixed))
 
 
 def pow_c_vec(bk: BatchKey, cs, ks,
-              backend: str | None = None) -> list[int]:
+              backend: str | None = None,
+              fixed: bool = False) -> list[int]:
     """Batched plaintext-constant multiply ⊗: [c^k mod n^2] elementwise.
 
     Bit-exact vs. scalar :func:`gold.c_mul_const` / ``c_mul_const_crt``
     (requires the private key holder, as all CRT-decomposed ops do).
     ``cs`` may be a :class:`CipherTensor` — nonnegative exponents then run
-    limb-in without materializing the batch.
+    limb-in without materializing the batch.  ``fixed`` opts a scalar ``ks``
+    into the host-known-exponent ladder; OFF by default because per-round
+    varying scalars would compile one executable per value.
     """
     if isinstance(cs, CipherTensor):
-        return pow_c_ct(bk, cs, ks, backend=backend).to_ints()
-    return modexp_crt_vec(bk, cs, ks, backend=backend)
+        return pow_c_ct(bk, cs, ks, backend=backend, fixed=fixed).to_ints()
+    return modexp_crt_vec(bk, cs, ks, backend=backend, fixed=fixed)
 
 
 def pow_c_ct(bk: BatchKey, cs: CipherTensor, ks,
-             backend: str | None = None) -> CipherTensor:
-    """Limb-in/limb-out ⊗ over a resident ciphertext batch."""
+             backend: str | None = None,
+             fixed: bool = False) -> CipherTensor:
+    """Limb-in/limb-out ⊗ over a resident ciphertext batch.
+
+    ``fixed`` as in :func:`pow_c_vec` (scalar ``ks``, stable across calls).
+    """
     B = len(cs)
     exps = _norm_exps(ks, B)
     if any(e < 0 for e in exps):   # host base inversion: materialize once
         return CipherTensor(
-            bk, modexp_crt_limbs(bk, cs.to_ints(), exps, backend=backend))
+            bk, modexp_crt_limbs(bk, cs.to_ints(), ks, backend=backend,
+                                 fixed=fixed))
     return CipherTensor(
-        bk, modexp_crt_limbs_in(bk, cs.limbs, exps, backend=backend))
+        bk, modexp_crt_limbs_in(bk, cs.limbs, ks, backend=backend,
+                                fixed=fixed))
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +301,7 @@ def _enc_ct_impl(bk: BatchKey, ms: list[int], rs: list[int],
     limb-resident (no host ring multiplies, no to_ints)."""
     key, vk = bk.key, bk.vk
     Ln, L2 = vk.pack_n.L16, vk.pack_n2.L16
-    rn = modexp_crt_limbs(bk, rs, key.n, backend=backend)
+    rn = modexp_crt_limbs(bk, rs, key.n, backend=backend, fixed=True)
     m_limbs = bi.from_ints([m % key.n for m in ms], Ln)
 
     def body(m_limbs, rn):
@@ -276,7 +359,7 @@ def rn_pool_limbs(bk: BatchKey, rs: Sequence[int],
     The batched replacement for :func:`gold.make_r_pool` on the ``vec``
     cipher path (which needs the pool in limb form anyway).
     """
-    return modexp_crt_limbs(bk, rs, bk.key.n, backend=backend)
+    return modexp_crt_limbs(bk, rs, bk.key.n, backend=backend, fixed=True)
 
 
 def dec_vec(bk: BatchKey, cs,
@@ -294,9 +377,9 @@ def dec_vec(bk: BatchKey, cs,
         if not len(cs):
             return []
         x = bi.to_ints(modexp_crt_limbs_in(bk, cs.limbs, key.lam,
-                                           backend=backend))
+                                           backend=backend, fixed=True))
     else:
-        x = modexp_crt_vec(bk, cs, key.lam, backend=backend)
+        x = modexp_crt_vec(bk, cs, key.lam, backend=backend, fixed=True)
     return [(xi - 1) // key.n * key.mu % key.n for xi in x]
 
 
@@ -339,8 +422,8 @@ def matvec_many(bk: BatchKey, Ks, cs_list: Sequence,
         ep = [e % key.phi_p2 for e in exps]
         eq = [e % key.phi_q2 for e in exps]
         le = max(1, max(bi.n_limbs_for(e) for e in ep + eq))
-        ep_l = jnp.asarray(bi.from_ints(ep, le))
-        eq_l = jnp.asarray(bi.from_ints(eq, le))
+        ep_l, eq_l = _shard_batch(bi.from_ints(ep, le),
+                                  bi.from_ints(eq, le))
 
         def bcast(x):
             x = x.reshape(-1, 1, N, x.shape[-1])
@@ -348,7 +431,8 @@ def matvec_many(bk: BatchKey, Ks, cs_list: Sequence,
             return x.reshape(-1, x.shape[-1])
 
         if ct_in:
-            c_limbs = jnp.concatenate([c.limbs for c in cs_list], axis=0)
+            c_limbs = _shard_batch(
+                jnp.concatenate([c.limbs for c in cs_list], axis=0))
 
             def powed_ct_body(c, ep, eq):
                 cp = pv._reduce_into(c, vk.pack_p2, backend)
@@ -357,8 +441,10 @@ def matvec_many(bk: BatchKey, Ks, cs_list: Sequence,
                 xq = ops.modexp(bcast(cq), eq, vk.pack_q2, backend=backend)
                 return pv.crt_combine_batch(vk, xp, xq, backend=backend)
 
-            powed = pv._cached_jit(vk, f"crt_mv_limbs_{backend}_{M}_{N}",
-                                   powed_ct_body)(c_limbs, ep_l, eq_l)
+            powed = pv._cached_jit(
+                vk, ("crt_mv_limbs", backend, M, N,
+                     ops.active_reduce_impl()),
+                powed_ct_body)(c_limbs, ep_l, eq_l)
         else:
             rows = [int(c) for row in cs_list for c in row]
             bp = bi.from_ints([c % key.p2 for c in rows], vk.pack_p2.L16)
@@ -369,9 +455,10 @@ def matvec_many(bk: BatchKey, Ks, cs_list: Sequence,
                 xq = ops.modexp(bcast(bq), eq, vk.pack_q2, backend=backend)
                 return pv.crt_combine_batch(vk, xp, xq, backend=backend)
 
-            powed = pv._cached_jit(vk, f"crt_mv_{backend}_{M}_{N}",
-                                   powed_body)(
-                jnp.asarray(bp), ep_l, jnp.asarray(bq), eq_l)
+            bp, bq = _shard_batch(bp, bq)
+            powed = pv._cached_jit(
+                vk, ("crt_mv", backend, M, N, ops.active_reduce_impl()),
+                powed_body)(bp, ep_l, bq, eq_l)
 
     def tree(powed):
         return pv.mul_tree(vk, powed.reshape(-1, N, L2), backend=backend)

@@ -182,21 +182,24 @@ def decrypt_batch_limbs(vk: VecKey, c_limbs: jax.Array,
     multiplicatively via n^{-1} mod 2^k (no big-int division circuit).
     The result is the complete residue mod n — no 63-bit truncation.
     """
-    return _cached_jit(vk, f"dec_{backend}",
+    # the reduce impl resolves at trace time inside ops.modexp_fixed, so
+    # it must be part of the cache identity (env flips retrace, not replay)
+    return _cached_jit(vk, ("dec", backend, ops.active_reduce_impl()),
                        lambda c: _decrypt_impl(vk, c, backend))(c_limbs)
 
 
 def _decrypt_impl(vk: VecKey, c_limbs: jax.Array,
                   backend: str | None = None) -> jax.Array:
     B = c_limbs.shape[0]
-    le = vk.exp_limbs_half
     # reduce c into each half space (eq. 35a-b)
     cp = _reduce_into(c_limbs, vk.pack_p2, backend)
     cq = _reduce_into(c_limbs, vk.pack_q2, backend)
-    xp = ops.modexp(cp, jnp.broadcast_to(jnp.asarray(vk.lam_p), (B, le)),
-                    vk.pack_p2, backend=backend)
-    xq = ops.modexp(cq, jnp.broadcast_to(jnp.asarray(vk.lam_q), (B, le)),
-                    vk.pack_q2, backend=backend)
+    # lam is key-constant and host-known, so the fixed-window ladder
+    # applies (static schedule, no oblivious table selects)
+    lam_p = bi.to_ints(np.asarray(vk.lam_p).reshape(1, -1))[0]
+    lam_q = bi.to_ints(np.asarray(vk.lam_q).reshape(1, -1))[0]
+    xp = ops.modexp_fixed(cp, lam_p, vk.pack_p2, backend=backend)
+    xq = ops.modexp_fixed(cq, lam_q, vk.pack_q2, backend=backend)
     x = crt_combine_batch(vk, xp, xq, backend=backend)    # c^lam mod n^2
     # alpha = (x - 1) / n  — exact division, multiplicative
     Ln = vk.pack_n.L16

@@ -2,19 +2,25 @@
 
 The paper's Algorithm 2 re-loads operands per Montgomery step; the GME work
 it cites shows the win is keeping ciphertext state in cache. Here the entire
-binary ladder — ``2 * exp_bits`` fused mulmods — runs inside one pallas_call,
-so the running result/base pair never leaves VMEM. Exponents are per-element
-(each plaintext/ciphertext has its own), and the ladder is constant-time
-(select, no data-dependent branches) as required for key-dependent exponents.
+ladder runs inside one pallas_call, so the running result/base pair never
+leaves VMEM. Exponents are per-element (each plaintext/ciphertext has its
+own), and the ladder is constant-time (select, no data-dependent branches)
+as required for key-dependent exponents.
 
 Layout and parameters: operands are little-endian radix-256 (2^8) int32
 limbs (callers in ``kernels/ops.py`` convert from the public radix-2^16
 ``core/bigint`` layout). ``method="binary"`` is the Algorithm-2-style ladder
 (2 mulmods/bit); ``method="win4"`` — the default via ``ops.modexp`` — is a
 4-bit fixed-window ladder (1.25 mulmods/bit + a 16-entry table, oblivious
-select). This module is the batched FAST PATH; the scalar reference it is
-tested against is the Python-int gold path in ``core/paillier.py`` (plus
-the jnp oracle ``kernels/ref.py`` sharing the same helpers).
+select). ``reduce_impl`` selects the per-step reduction: ``"barrett"``
+(the oracle, ``kernels/common.py``) or ``"montgomery"`` (REDC,
+``kernels/montgomery.py``; ``r1``/``r2`` limb constants and the static
+``mp`` inverse limb come from the caller's ``ModulusPack``).
+``modexp_fixed_pallas`` is the batch-shared host-known-exponent variant:
+the window schedule is a static tuple baked into the trace. This module is
+the batched FAST PATH; the scalar reference it is tested against is the
+Python-int gold path in ``core/paillier.py`` (plus the jnp oracle
+``kernels/ref.py`` sharing the same helpers).
 """
 from __future__ import annotations
 
@@ -25,6 +31,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from . import common as cm
+from . import montgomery as mg
+
+METHODS = ("binary", "win4")
+REDUCE_IMPLS = ("barrett", "montgomery")
 
 
 def _modexp_kernel(base_ref, exp_ref, m_ref, mu_ref, o_ref):
@@ -36,25 +46,139 @@ def _modexp_win4_kernel(base_ref, exp_ref, m_ref, mu_ref, o_ref):
                                   mu_ref[...])
 
 
+def _modexp_mont_kernel(base_ref, exp_ref, m_ref, r1_ref, r2_ref, o_ref, *,
+                        mp):
+    o_ref[...] = mg.modexp2d_mont(base_ref[...], exp_ref[...], m_ref[...],
+                                  mp, r1_ref[...], r2_ref[...])
+
+
+def _modexp_mont_win4_kernel(base_ref, exp_ref, m_ref, r1_ref, r2_ref,
+                             o_ref, *, mp):
+    o_ref[...] = mg.modexp2d_mont_win4(base_ref[...], exp_ref[...],
+                                       m_ref[...], mp, r1_ref[...],
+                                       r2_ref[...])
+
+
+def _modexp_fixed_mont_kernel(base_ref, win_ref, m_ref, r1_ref, r2_ref,
+                              o_ref, *, mp):
+    o_ref[...] = mg.modexp2d_mont_fixed(base_ref[...], win_ref[...],
+                                        m_ref[...], mp, r1_ref[...],
+                                        r2_ref[...])
+
+
+def _modexp_fixed_barrett_kernel(base_ref, win_ref, m_ref, mu_ref, o_ref):
+    o_ref[...] = mg.modexp2d_fixed_barrett(base_ref[...], win_ref[...],
+                                           m_ref[...], mu_ref[...])
+
+
+def _validate(method: str, reduce_impl: str) -> None:
+    if method not in METHODS:
+        raise ValueError(f"unknown modexp method {method!r}; "
+                         f"expected one of {METHODS}")
+    if reduce_impl not in REDUCE_IMPLS:
+        raise ValueError(f"unknown reduce_impl {reduce_impl!r}; "
+                         f"expected one of {REDUCE_IMPLS}")
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret",
-                                             "method"))
+                                             "method", "reduce_impl", "mp"))
 def modexp_pallas(base8: jax.Array, exp8: jax.Array, m8: jax.Array,
                   mu8: jax.Array, block_b: int = 128,
-                  interpret: bool = True, method: str = "binary") -> jax.Array:
+                  interpret: bool = True, method: str = "binary",
+                  reduce_impl: str = "barrett",
+                  r1_8: jax.Array | None = None,
+                  r2_8: jax.Array | None = None,
+                  mp: int | None = None) -> jax.Array:
     """base^exp mod m over a batch: (B, L), (B, Le) -> (B, L), radix-256."""
+    _validate(method, reduce_impl)
     bsz, L = base8.shape
     assert bsz % block_b == 0, "pad batch to a block multiple (ops.py does)"
     grid = (bsz // block_b,)
-    return pl.pallas_call(
-        _modexp_win4_kernel if method == "win4" else _modexp_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, L), lambda i: (i, 0)),
-            pl.BlockSpec((block_b, exp8.shape[1]), lambda i: (i, 0)),
-            pl.BlockSpec((1, m8.shape[1]), lambda i: (0, 0)),
+    base_specs = [
+        pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+        pl.BlockSpec((block_b, exp8.shape[1]), lambda i: (i, 0)),
+        pl.BlockSpec((1, m8.shape[1]), lambda i: (0, 0)),
+    ]
+    if reduce_impl == "montgomery":
+        if r1_8 is None or r2_8 is None or mp is None:
+            raise ValueError("montgomery reduce_impl needs r1_8/r2_8/mp "
+                             "(pack_modulus provides them for odd moduli)")
+        kern = functools.partial(
+            _modexp_mont_win4_kernel if method == "win4"
+            else _modexp_mont_kernel, mp=mp)
+        in_specs = base_specs + [
+            pl.BlockSpec((1, r1_8.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((1, r2_8.shape[1]), lambda i: (0, 0)),
+        ]
+        operands = (base8, exp8, m8, r1_8, r2_8)
+    else:
+        kern = _modexp_win4_kernel if method == "win4" else _modexp_kernel
+        in_specs = base_specs + [
             pl.BlockSpec((1, mu8.shape[1]), lambda i: (0, 0)),
-        ],
+        ]
+        operands = (base8, exp8, m8, mu8)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, L), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, L), jnp.int32),
         interpret=interpret,
-    )(base8, exp8, m8, mu8)
+    )(*operands)
+
+
+@functools.partial(jax.jit, static_argnames=("windows", "block_b",
+                                             "interpret", "reduce_impl",
+                                             "mp"))
+def modexp_fixed_pallas(base8: jax.Array, m8: jax.Array, mu8: jax.Array,
+                        windows: tuple[int, ...], block_b: int = 128,
+                        interpret: bool = True,
+                        reduce_impl: str = "barrett",
+                        r1_8: jax.Array | None = None,
+                        r2_8: jax.Array | None = None,
+                        mp: int | None = None) -> jax.Array:
+    """base^e mod m with one host-known exponent shared by the batch.
+
+    ``windows`` is the static MSB-first 4-bit schedule from
+    :func:`repro.kernels.montgomery.exp_windows` — part of the jit cache
+    key, so this is only used for key-constant exponents (enc's ``n``,
+    dec's CRT ``lam`` halves, scalar ``pow_c``).
+    """
+    if reduce_impl not in REDUCE_IMPLS:
+        raise ValueError(f"unknown reduce_impl {reduce_impl!r}; "
+                         f"expected one of {REDUCE_IMPLS}")
+    bsz, L = base8.shape
+    assert bsz % block_b == 0, "pad batch to a block multiple (ops.py does)"
+    if not windows:                      # e == 0: everything is 1
+        return jnp.zeros((bsz, L), jnp.int32).at[:, 0].set(1)
+    win_arr = jnp.asarray(windows, jnp.int32)[None, :]   # (1, n_win)
+    grid = (bsz // block_b,)
+    base_specs = [
+        pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+        pl.BlockSpec((1, win_arr.shape[1]), lambda i: (0, 0)),
+        pl.BlockSpec((1, m8.shape[1]), lambda i: (0, 0)),
+    ]
+    if reduce_impl == "montgomery":
+        if r1_8 is None or r2_8 is None or mp is None:
+            raise ValueError("montgomery reduce_impl needs r1_8/r2_8/mp "
+                             "(pack_modulus provides them for odd moduli)")
+        kern = functools.partial(_modexp_fixed_mont_kernel, mp=mp)
+        in_specs = base_specs + [
+            pl.BlockSpec((1, r1_8.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((1, r2_8.shape[1]), lambda i: (0, 0)),
+        ]
+        operands = (base8, win_arr, m8, r1_8, r2_8)
+    else:
+        kern = _modexp_fixed_barrett_kernel
+        in_specs = base_specs + [
+            pl.BlockSpec((1, mu8.shape[1]), lambda i: (0, 0)),
+        ]
+        operands = (base8, win_arr, m8, mu8)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, L), jnp.int32),
+        interpret=interpret,
+    )(*operands)

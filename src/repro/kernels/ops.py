@@ -9,9 +9,21 @@ Backends:
   * ``pallas`` — the Pallas kernels; ``interpret=True`` automatically when
                  running on CPU (this container), compiled Mosaic on TPU.
 
+Reduction (``REPRO_REDUCE_IMPL``, read per call):
+  * ``montgomery`` (default) — REDC ladders from kernels/montgomery.py for
+    ``modexp``/``modexp_fixed`` (odd moduli; even moduli fall back);
+  * ``barrett``    — the original trial-division-free oracle path.
+  Standalone ``mulmod`` always uses Barrett: a lone product can't amortize
+  the Montgomery domain enter/leave, so REDC only pays inside ladders.
+
 Barrett correctness requires the modulus to fill its top radix-256 limb, so
 ``pack_modulus`` sizes L8 to the exact byte length (DESIGN.md §2 note on
 radix re-sizing vs. the paper's b-tilde choice).
+
+Batch padding: batches are padded UP to the canonical ``block_b`` and the
+jit cache is keyed on that canonical size — never on the incoming batch
+size, which under serving/churn workloads varies per round and previously
+grew the cache without bound (one trace per distinct batch < 128).
 """
 from __future__ import annotations
 
@@ -25,14 +37,16 @@ import jax.numpy as jnp
 
 from ..core import bigint as bi
 from . import common as cm
+from . import montgomery as mg
 from . import ref as ref_impl
 from .limb_mulmod import mulmod_pallas
-from .modexp import modexp_pallas
+from .modexp import METHODS, REDUCE_IMPLS, modexp_fixed_pallas, modexp_pallas
 
 DEFAULT_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "ref")
 
-# jitted-closure cache: keyed by (modulus, backend, op) — jax.jit dedups
-# shapes internally, so each (op, modulus, shape) traces exactly once.
+# jitted-closure cache: keyed by (modulus, backend, op, canonical block /
+# method / reduce impl) — jax.jit dedups shapes internally, so each
+# (op, modulus, shape) traces exactly once.
 _JIT_CACHE: dict = {}
 
 
@@ -49,7 +63,12 @@ def _interpret() -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class ModulusPack:
-    """Precomputed modulus material for both radices."""
+    """Precomputed modulus material for both radices.
+
+    ``mp8``/``r1_8``/``r2_8`` are the Montgomery constants at the radix-256
+    width (``-m^{-1} mod 256``, ``R mod m``, ``R^2 mod m`` with
+    ``R = 256^L8``); ``None`` for even moduli, where only Barrett applies.
+    """
     m_int: int
     L16: int
     L8: int
@@ -57,6 +76,9 @@ class ModulusPack:
     mu16: np.ndarray   # (L16+1,)  floor(2^{32 L16} / m)
     m8: np.ndarray     # (1, L8)
     mu8: np.ndarray    # (1, L8+1) floor(256^{2 L8} / m)
+    mp8: int | None = None
+    r1_8: np.ndarray | None = None   # (1, L8)
+    r2_8: np.ndarray | None = None   # (1, L8)
 
 
 def pack_modulus(m: int) -> ModulusPack:
@@ -69,10 +91,17 @@ def pack_modulus(m: int) -> ModulusPack:
         mu8_limbs[i] = x & 0xFF
         x >>= 8
     assert x == 0
+    mont = mg.mont_constants(m, L8)
+    mp8 = r1_8 = r2_8 = None
+    if mont is not None:
+        mp8, r1, r2 = mont
+        r1_8 = _to8(r1, L8)[None, :]
+        r2_8 = _to8(r2, L8)[None, :]
     return ModulusPack(
         m_int=m, L16=L16, L8=L8,
         m16=bi.from_int(m, L16), mu16=bi.barrett_mu(m, L16),
         m8=_to8(m, L8)[None, :], mu8=mu8_limbs[None, :],
+        mp8=mp8, r1_8=r1_8, r2_8=r2_8,
     )
 
 
@@ -107,6 +136,26 @@ def _to_radix16(x8: jax.Array, L16: int) -> jax.Array:
     return cm.limbs8_to16(x8)
 
 
+def active_reduce_impl() -> str:
+    """The session-wide reduction knob, validated (read per call so tests
+    and the conformance matrix can flip it without re-importing)."""
+    impl = os.environ.get("REPRO_REDUCE_IMPL", "montgomery")
+    if impl not in REDUCE_IMPLS:
+        raise ValueError(f"REPRO_REDUCE_IMPL={impl!r}; expected one of "
+                         f"{REDUCE_IMPLS}")
+    return impl
+
+
+def _resolve_reduce(pack: ModulusPack, reduce_impl: str | None) -> str:
+    impl = reduce_impl or active_reduce_impl()
+    if impl not in REDUCE_IMPLS:
+        raise ValueError(f"unknown reduce_impl {impl!r}; expected one of "
+                         f"{REDUCE_IMPLS}")
+    if impl == "montgomery" and pack.mp8 is None:
+        return "barrett"            # even modulus: REDC needs gcd(m,256)=1
+    return impl
+
+
 def mulmod(a16: jax.Array, b16: jax.Array, pack: ModulusPack,
            backend: str | None = None, block_b: int = 128) -> jax.Array:
     """(B, L16) x (B, L16) -> (B, L16): (a*b) mod m."""
@@ -114,6 +163,8 @@ def mulmod(a16: jax.Array, b16: jax.Array, pack: ModulusPack,
     m8 = pack.m8
     mu8 = pack.mu8
     L8, L16 = pack.L8, pack.L16
+    if a16.shape[0] == 0:
+        return jnp.zeros((0, L16), jnp.int32)
 
     if backend == "ref":
         def body(a16, b16):
@@ -122,7 +173,6 @@ def mulmod(a16: jax.Array, b16: jax.Array, pack: ModulusPack,
                                     jnp.asarray(m8), jnp.asarray(mu8)), L16)
         return _cached_jit((pack.m_int, "ref", "mulmod"), body)(a16, b16)
     if backend == "pallas":
-        block_b = min(block_b, max(1, a16.shape[0]))
         interp = _interpret()
 
         def body(a16, b16):
@@ -139,21 +189,43 @@ def mulmod(a16: jax.Array, b16: jax.Array, pack: ModulusPack,
 MODEXP_METHOD = os.environ.get("REPRO_MODEXP_METHOD", "win4")
 
 
+def _validate_method(method: str, exp_bits: int) -> None:
+    if method not in METHODS:
+        raise ValueError(f"unknown modexp method {method!r}; expected one "
+                         f"of {METHODS}")
+    if method == "win4" and exp_bits % 4 != 0:
+        raise ValueError(
+            f"win4 modexp requires an exponent bit-width that is a "
+            f"multiple of 4, got {exp_bits} bits; pad the exponent limbs "
+            f"or use method='binary'")
+
+
 def modexp(base16: jax.Array, exp16: jax.Array, pack: ModulusPack,
            backend: str | None = None, block_b: int = 128,
-           method: str | None = None) -> jax.Array:
+           method: str | None = None,
+           reduce_impl: str | None = None) -> jax.Array:
     """base^exp mod m over a batch; per-element exponents.
 
     ``method``: "binary" (the paper's Algorithm-2 ladder) or "win4"
     (4-bit fixed window, beyond-paper §Perf optimization; default).
     Exponent bit-width must be a multiple of 4 for win4 (16-bit limbs
-    always satisfy this).
+    always satisfy this; validated here — the kernel-side assert is a
+    trace-time no-op). ``reduce_impl`` overrides ``REPRO_REDUCE_IMPL``.
     """
     backend = backend or DEFAULT_BACKEND
     method = method or MODEXP_METHOD
+    _validate_method(method, exp16.shape[1] * 16)
+    impl = _resolve_reduce(pack, reduce_impl)
     m8 = pack.m8
     mu8 = pack.mu8
     L8, L16 = pack.L8, pack.L16
+    if base16.shape[0] == 0:
+        return jnp.zeros((0, L16), jnp.int32)
+    # numpy constants, NOT jnp: converting here while an outer jit is
+    # tracing would capture that trace's tracers in the cached closure
+    mont_args = {}
+    if impl == "montgomery":
+        mont_args = dict(r1_8=pack.r1_8, r2_8=pack.r2_8, mp=pack.mp8)
 
     if backend == "ref":
         def body(base16, exp16):
@@ -161,11 +233,11 @@ def modexp(base16: jax.Array, exp16: jax.Array, pack: ModulusPack,
                 ref_impl.modexp_ref(_to_radix8(base16, L8),
                                     cm.limbs16_to8(exp16),
                                     jnp.asarray(m8), jnp.asarray(mu8),
-                                    method=method), L16)
-        return _cached_jit((pack.m_int, "ref", "modexp", method), body)(
-            base16, exp16)
+                                    method=method, reduce_impl=impl,
+                                    **mont_args), L16)
+        return _cached_jit((pack.m_int, "ref", "modexp", method, impl),
+                           body)(base16, exp16)
     if backend == "pallas":
-        block_b = min(block_b, max(1, base16.shape[0]))
         interp = _interpret()
 
         def body(base16, exp16):
@@ -173,8 +245,68 @@ def modexp(base16: jax.Array, exp16: jax.Array, pack: ModulusPack,
             e8, _ = _pad_batch(cm.limbs16_to8(exp16), block_b)
             out8 = modexp_pallas(b8, e8, jnp.asarray(m8), jnp.asarray(mu8),
                                  block_b=block_b, interpret=interp,
-                                 method=method)[:bsz]
+                                 method=method, reduce_impl=impl,
+                                 **mont_args)[:bsz]
             return _to_radix16(out8, L16)
-        return _cached_jit((pack.m_int, "pallas", "modexp", block_b, method),
-                           body)(base16, exp16)
+        return _cached_jit(
+            (pack.m_int, "pallas", "modexp", block_b, method, impl),
+            body)(base16, exp16)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def modexp_fixed(base16: jax.Array, e: int, pack: ModulusPack,
+                 backend: str | None = None, block_b: int = 128,
+                 reduce_impl: str | None = None) -> jax.Array:
+    """base^e mod m with ONE host-known exponent shared across the batch.
+
+    The fixed-base/fixed-exponent fast path (ROADMAP item 3): enc's
+    ``r^n``, dec's CRT ``c^lam`` halves and scalar ``pow_c`` all raise a
+    whole batch to the same key-constant exponent, so the 4-bit window
+    schedule is precomputed host-side (:func:`montgomery.exp_windows`),
+    baked into the trace as a constant, and the ladder length tracks the
+    exponent's true bit-length.  Only call with key-constant exponents —
+    the jit cache is keyed on ``e``.
+    """
+    if e < 0:
+        raise ValueError("modexp_fixed requires a non-negative exponent; "
+                         "invert the base host-side first")
+    backend = backend or DEFAULT_BACKEND
+    impl = _resolve_reduce(pack, reduce_impl)
+    m8 = pack.m8
+    mu8 = pack.mu8
+    L8, L16 = pack.L8, pack.L16
+    if base16.shape[0] == 0:
+        return jnp.zeros((0, L16), jnp.int32)
+    windows = mg.exp_windows(e)
+    mont_args = {}
+    if impl == "montgomery":    # numpy constants (see modexp note)
+        mont_args = dict(r1_8=pack.r1_8, r2_8=pack.r2_8, mp=pack.mp8)
+
+    if backend == "ref":
+        def body(base16):
+            b8 = _to_radix8(base16, L8)
+            win_arr = jnp.asarray(windows, jnp.int32).reshape(1, -1)
+            if impl == "montgomery":
+                out8 = mg.modexp2d_mont_fixed(
+                    b8, win_arr, jnp.asarray(m8), pack.mp8,
+                    jnp.asarray(pack.r1_8), jnp.asarray(pack.r2_8))
+            else:
+                out8 = mg.modexp2d_fixed_barrett(
+                    b8, win_arr, jnp.asarray(m8), jnp.asarray(mu8))
+            return _to_radix16(out8, L16)
+        return _cached_jit((pack.m_int, "ref", "modexp_fixed", impl, e),
+                           body)(base16)
+    if backend == "pallas":
+        interp = _interpret()
+
+        def body(base16):
+            b8, bsz = _pad_batch(_to_radix8(base16, L8), block_b)
+            out8 = modexp_fixed_pallas(
+                b8, jnp.asarray(m8), jnp.asarray(mu8), windows,
+                block_b=block_b, interpret=interp, reduce_impl=impl,
+                **mont_args)[:bsz]
+            return _to_radix16(out8, L16)
+        return _cached_jit(
+            (pack.m_int, "pallas", "modexp_fixed", block_b, impl, e),
+            body)(base16)
     raise ValueError(f"unknown backend {backend!r}")

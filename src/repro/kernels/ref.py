@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import common as cm
+from . import montgomery as mg
 
 
 def mulmod_ref(a8: jax.Array, b8: jax.Array, m8: jax.Array, mu8: jax.Array) -> jax.Array:
@@ -27,8 +28,29 @@ def mulmod_ref(a8: jax.Array, b8: jax.Array, m8: jax.Array, mu8: jax.Array) -> j
 
 
 def modexp_ref(base8: jax.Array, exp8: jax.Array, m8: jax.Array,
-               mu8: jax.Array, method: str = "binary") -> jax.Array:
-    """ModExp oracle, radix-256 int32 limbs (binary or win4 ladder)."""
+               mu8: jax.Array, method: str = "binary",
+               reduce_impl: str = "barrett",
+               r1_8: jax.Array | None = None,
+               r2_8: jax.Array | None = None,
+               mp: int | None = None) -> jax.Array:
+    """ModExp oracle, radix-256 int32 limbs (binary or win4 ladder).
+
+    ``reduce_impl="montgomery"`` runs the same ladder schedule over REDC
+    (``kernels/montgomery.py``) — the fast path; ``"barrett"`` is the
+    oracle. Unknown names raise instead of silently falling back.
+    """
+    if method not in ("binary", "win4"):
+        raise ValueError(f"unknown modexp method {method!r}; "
+                         "expected 'binary' or 'win4'")
+    if reduce_impl == "montgomery":
+        if r1_8 is None or r2_8 is None or mp is None:
+            raise ValueError("montgomery reduce_impl needs r1_8/r2_8/mp")
+        if method == "win4":
+            return mg.modexp2d_mont_win4(base8, exp8, m8, mp, r1_8, r2_8)
+        return mg.modexp2d_mont(base8, exp8, m8, mp, r1_8, r2_8)
+    if reduce_impl != "barrett":
+        raise ValueError(f"unknown reduce_impl {reduce_impl!r}; "
+                         "expected 'barrett' or 'montgomery'")
     if method == "win4":
         return cm.modexp2d_win4(base8, exp8, m8, mu8)
     return cm.modexp2d(base8, exp8, m8, mu8)

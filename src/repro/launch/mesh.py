@@ -20,6 +20,23 @@ def make_mesh(shape, axes):
                          axis_types=(axis_type.Auto,) * len(axes))
 
 
+def kernel_mesh():
+    """1-D ``batch`` mesh over every local device, for sharding the crypto
+    kernels' element batches (``core.paillier_batch._shard_batch``).
+
+    Returns ``None`` on single-device hosts — the common CPU container —
+    so callers can skip the device_put entirely.  Multi-chip hosts (or a
+    CPU with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) get
+    every chip working on a slice of the batch: the limb ops are
+    batch-elementwise, so partitioning the leading axis shards the whole
+    ladder with zero cross-device traffic until the caller gathers.
+    """
+    n = jax.local_device_count()
+    if n <= 1:
+        return None
+    return make_mesh((n,), ("batch",))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 chips per pod; the multi-pod mesh adds a leading 2-pod axis.
 

@@ -75,9 +75,16 @@ def device_kind() -> str:
     Throughput tables are device-specific — the limb kernels that lose to
     Python-int pow on a CPU win on an accelerator — so entries measured on
     one device kind must never price another's dispatch decisions.
+
+    Multi-chip hosts get a ``xN`` device-count suffix (``tpux4``): the
+    batched ops shard their leading axis across the local mesh
+    (``paillier_batch._shard_batch``), so measured throughput scales with
+    the chip count and a 4-chip table must not price a 1-chip host.
     """
     import jax
-    return jax.default_backend()
+    kind = jax.default_backend()
+    n = jax.local_device_count()
+    return f"{kind}x{n}" if n > 1 else kind
 
 
 def _entry_key(backend: str, key_bits: int, batch: int,
