@@ -90,7 +90,29 @@ def main() -> None:
             rows.append(f"{key}_ERROR,0,{type(e).__name__}:{e}")
         for r in rows[before:]:
             print(r, flush=True)
+        _ledger_rows(key, rows[before:])
         print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+def _ledger_rows(bench: str, rows: list[str]) -> None:
+    """Append each CSV row to the run-history ledger (repro.obs.ledger)
+    so the regression sentinel can band-check us_per_call across runs.
+    Best-effort: a disabled ledger or an unparsable row is skipped."""
+    try:
+        from repro.obs import ledger
+    except Exception:  # noqa: BLE001 — benches may run without src on path
+        return
+    if ledger.ledger_path() is None:
+        return
+    for row in rows:
+        parts = row.split(",", 2)
+        if len(parts) != 3 or parts[0].endswith("_ERROR"):
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        ledger.append(ledger.record_bench_row(bench, parts[0], us, parts[2]))
 
 
 if __name__ == "__main__":

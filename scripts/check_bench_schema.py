@@ -13,7 +13,12 @@ can't drift from the versioned schemas:
   uphold its own claim — fewer crypto ops at bit-identical MSE;
 * every trace file must validate against
   :func:`repro.obs.chrome_trace.validate` (chrome-trace event structure,
-  span categories, embedded RunReport).
+  span categories, embedded RunReport);
+* every ``*.jsonl`` run-history ledger (``repro.obs.ledger``) must hold
+  one JSON object per line with the ledger envelope (``v``, a known
+  ``kind``, ``ts``), a 16-hex ``core_sig`` + current RunReport
+  ``schema_version`` on run records, and ``bench``/``name``/
+  ``us_per_call`` on bench records.
 
 Pass explicit paths to check specific files (used by the CI smoke step on
 the fresh trace it just produced)::
@@ -28,6 +33,7 @@ import sys
 
 BENCH_GLOB = "BENCH_*.json"
 TRACE_GLOB = "*.trace.json"
+LEDGER_GLOB = "*.jsonl"
 
 
 def _iter_reports(obj, path="$"):
@@ -145,9 +151,66 @@ def check_trace(path: pathlib.Path) -> list[str]:
     return chrome_trace.validate(doc, str(path))
 
 
+_HEX = set("0123456789abcdef")
+
+
+def _check_ledger_record(rec, where: str) -> list[str]:
+    from repro.obs.ledger import LEDGER_SCHEMA_VERSION
+    from repro.obs.metrics import REPORT_SCHEMA_VERSION
+    if not isinstance(rec, dict):
+        return [f"{where}: record must be a JSON object"]
+    errors = []
+    if rec.get("v") != LEDGER_SCHEMA_VERSION:
+        errors.append(f"{where}: ledger envelope v={rec.get('v')!r} != "
+                      f"{LEDGER_SCHEMA_VERSION}")
+    if not isinstance(rec.get("ts"), (int, float)):
+        errors.append(f"{where}: missing numeric ts")
+    kind = rec.get("kind")
+    if kind == "run":
+        if rec.get("schema_version") != REPORT_SCHEMA_VERSION:
+            errors.append(f"{where}: run record schema_version "
+                          f"{rec.get('schema_version')!r} != "
+                          f"{REPORT_SCHEMA_VERSION}")
+        sig = rec.get("core_sig")
+        if not (isinstance(sig, str) and len(sig) == 16
+                and set(sig) <= _HEX):
+            errors.append(f"{where}: core_sig {sig!r} is not 16 hex digits")
+    elif kind == "bench":
+        for k in ("bench", "name"):
+            if not isinstance(rec.get(k), str):
+                errors.append(f"{where}: bench record missing str {k!r}")
+        if not isinstance(rec.get("us_per_call"), (int, float)):
+            errors.append(f"{where}: bench record missing numeric "
+                          "us_per_call")
+    else:
+        errors.append(f"{where}: unknown record kind {kind!r}")
+    return errors
+
+
+def check_ledger(path: pathlib.Path) -> list[str]:
+    try:
+        lines = path.read_text().splitlines()
+    except OSError as e:
+        return [f"{path}: unreadable ({e})"]
+    errors = []
+    for i, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        where = f"{path}:{i}"
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{where}: corrupt JSON line ({e})")
+            continue
+        errors.extend(_check_ledger_record(rec, where))
+    return errors
+
+
 def check_path(path: pathlib.Path) -> list[str]:
     if path.name.endswith(".trace.json"):
         return check_trace(path)
+    if path.name.endswith(".jsonl"):
+        return check_ledger(path)
     return check_bench(path)
 
 
@@ -157,7 +220,9 @@ def main(argv: list[str] | None = None) -> int:
     if argv:
         paths = [pathlib.Path(a) for a in argv]
     else:
-        paths = sorted(root.glob(BENCH_GLOB)) + sorted(root.glob(TRACE_GLOB))
+        paths = (sorted(root.glob(BENCH_GLOB))
+                 + sorted(root.glob(TRACE_GLOB))
+                 + sorted(root.glob(LEDGER_GLOB)))
     errors: list[str] = []
     for p in paths:
         if not p.exists():

@@ -1,0 +1,90 @@
+"""CI regression gate: sentinel-check EVERY config group in a ledger.
+
+``python -m repro.obs.sentinel`` checks only the newest ledger record; a
+CI job that just ran several smoke configs (edge_sim arms, workload
+sweeps, bench rows) needs the NEWEST RECORD OF EVERY CONFIG GROUP
+checked against that group's trailing baseline.  This script does that:
+
+1. load the ledger (``--ledger``, else ``$REPRO_LEDGER``, else the
+   default ``~/.cache/repro/ledger.jsonl``);
+2. group records by :func:`repro.obs.ledger.config_key`;
+3. for each group, run :func:`repro.obs.sentinel.check_record` on the
+   newest record against the group's earlier records (single-record
+   groups pass vacuously — a first run cannot regress);
+4. exit 1 if any group produced findings, 0 otherwise (2 on a disabled
+   or unreadable ledger).
+
+CI seeds the ledger with two identical smoke passes, asserts this gate
+exits 0, then doctors a record (3x warm-launch p95, mutated core_sig)
+and asserts it exits nonzero — see .github/workflows/ci.yml.
+
+Usage::
+
+  PYTHONPATH=src python -m scripts.check_regression [--ledger PATH]
+      [--last N] [--ratio R] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs import ledger, sentinel
+
+
+def check_all(records: list[dict], *, last: int = sentinel.DEFAULT_BASELINE,
+              ratio: float = sentinel.DEFAULT_RATIO) -> list[dict]:
+    """One result per config group: the newest record, its baseline
+    size, and its findings (possibly empty)."""
+    groups: dict[tuple, list[dict]] = {}
+    for rec in records:
+        groups.setdefault(ledger.config_key(rec), []).append(rec)
+    results = []
+    for key, group in groups.items():
+        current = group[-1]
+        base = ledger.baseline_for(current, group[:-1], last=last)
+        findings = sentinel.check_record(current, base, ratio=ratio)
+        results.append({"config": list(key), "records": len(group),
+                        "baseline_n": len(base), "findings": findings})
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m scripts.check_regression",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--ledger", default=None,
+                    help="ledger path (default: $REPRO_LEDGER or "
+                         f"{ledger.DEFAULT_PATH})")
+    ap.add_argument("--last", type=int, default=sentinel.DEFAULT_BASELINE,
+                    help="baseline window per config group")
+    ap.add_argument("--ratio", type=float, default=sentinel.DEFAULT_RATIO,
+                    help="multiplicative regression threshold")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable per-group results")
+    args = ap.parse_args(argv)
+    path = args.ledger or ledger.ledger_path()
+    if path is None:
+        print("check_regression: ledger disabled (REPRO_LEDGER=off)",
+              file=sys.stderr)
+        return 2
+    records = ledger.load(path)
+    results = check_all(records, last=args.last, ratio=args.ratio)
+    flagged = [r for r in results if r["findings"]]
+    if args.json:
+        print(json.dumps({"ledger": path, "records": len(records),
+                          "groups": len(results), "flagged": len(flagged),
+                          "results": results}, indent=1, default=str))
+    else:
+        print(f"check_regression: {len(records)} record(s), "
+              f"{len(results)} config group(s), {len(flagged)} flagged")
+        for r in flagged:
+            print(f"  group {tuple(r['config'])} "
+                  f"(baseline n={r['baseline_n']}):")
+            for f in r["findings"]:
+                print(f"    [{f['check']}] {f['message']}")
+    return 1 if flagged else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

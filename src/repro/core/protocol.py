@@ -67,8 +67,11 @@ from . import paillier_batch as pb
 from . import paillier_vec as pv
 from . import bigint as bi
 from .cipher_tensor import CipherTensor
-from .quantization import QuantSpec, gamma1, gamma2, dequantize_theorem1
+from .quantization import (QuantSpec, gamma1, gamma2, gamma1_saturation,
+                           gamma2_saturation, dequantize_theorem1)
 from .. import workloads as workloads_mod
+from ..obs import health as health_mod
+from ..obs import ledger as ledger_mod
 from ..obs import metrics as obs_metrics
 
 
@@ -507,7 +510,8 @@ def resolve_workload(cfg: ProtocolConfig,
 
 
 def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
-                 workload: "workloads_mod.Workload | None" = None
+                 workload: "workloads_mod.Workload | None" = None,
+                 health: "bool | health_mod.HealthMonitor" = False,
                  ) -> ProtocolResult:
     """Run 3P-ADMM-PC2 end to end; master-node state lives in this frame.
 
@@ -515,13 +519,20 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
     encrypted chain per edge per round is always enc(Γ₂ u1) ⊕ enc(Γ₂ u2),
     ⊗ by the edge's Γ₂(C_k), ⊕ the stored Γ₁(u3_k) — only WHICH vectors
     and matrices fill those slots is the workload's business.
+
+    ``health`` turns on the live watchers this driver supports (MSE
+    divergence/stall and quantizer-range saturation — see
+    ``repro.obs.health``); a monitored run carries the fired alerts at
+    ``stats["health"]`` (non-core, so sync-mode conformance is
+    unaffected).  Default off: the NullMonitor path is allocation-free.
     """
     if cfg.deadline is not None or cfg.cipher == "auto":
         # straggler/deadline semantics and adaptive dispatch live in the
         # event-driven runtime; the loop below is the synchronous reference
         from ..runtime.runner import run_on_runtime
-        return run_on_runtime(A, y, cfg, workload=workload)
+        return run_on_runtime(A, y, cfg, workload=workload, health=health)
 
+    monitor = health_mod.as_monitor(health)
     wl = resolve_workload(cfg, workload)
     rng = random.Random(cfg.seed)
     K = cfg.K
@@ -580,6 +591,8 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
     counter.phase = PHASE_SHARE
     for k, edge in enumerate(edges):
         q_alpha = np.asarray(gamma1(u3s[k], spec))
+        if monitor.enabled:
+            monitor.observe_quant(-1, *gamma1_saturation(q_alpha, spec))
         c_alpha = box.encrypt(q_alpha)
         traffic["master->edge"] += box.ct_bytes(Nk)
         edge.store_shared(c_alpha)
@@ -662,6 +675,10 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
             u1, u2 = wl.iter_inputs(st, k)
             qz = np.asarray(gamma2(u1, spec))
             qv = np.asarray(gamma2(u2, spec))
+            if monitor.enabled:
+                cz_n, tz_n = gamma2_saturation(qz, spec)
+                cv_n, tv_n = gamma2_saturation(qv, spec)
+                monitor.observe_quant(t, cz_n + cv_n, tz_n + tv_n)
             w_sum = float(np.sum(u1 + u2))
             if cfg.recycle and last_q[k] is not None \
                     and int(np.max(np.abs(qz - last_q[k][0]))) \
@@ -697,6 +714,10 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
                     last_R[k] = R
             x_new[sl] = np.asarray(dequantize_theorem1(
                 R, C_rowsums[k], w_sum, Nk, spec))
+        if monitor.enabled:
+            # iterate step vs the (t-1) iterate, BEFORE the global update
+            # consumes it — the live convergence observable
+            monitor.observe_round(t, float(np.mean((x_new - st.x_prev) ** 2)))
         # master updates (10b)/(10c) with the (t-1) iterate — Jacobi order
         wl.global_update(st, x_new)
         history[t] = x_new
@@ -709,6 +730,13 @@ def run_protocol(A: np.ndarray, y: np.ndarray, cfg: ProtocolConfig,
         cipher=cfg.cipher, workload=wl.name,
         reshare_events=reshare_events, history=history,
         churn={**churn_counts, "recycled": recycled})
+    if monitor.enabled:
+        # non-core key: a monitored sync pair still compares bit-identical
+        # on every CORE_SECTIONS entry
+        stats["health"] = monitor.health_section()
+    # run-history ledger: one compact record per completed run (no-op
+    # when REPRO_LEDGER is off; never raises)
+    ledger_mod.record_run(stats, cfg=cfg, mode="sync")
     return ProtocolResult(x=st.x_prev, history=history, stats=stats,
                           stale_events=0)
 

@@ -106,6 +106,28 @@ def dequantize_theorem1(R, B_row_sums, w_sum, n_dim: int, spec: QuantSpec):
             - 2.0 * n_dim * spec.zmin ** 2)
 
 
+def gamma2_saturation(q, spec: QuantSpec) -> tuple[int, int]:
+    """Encode-clipping counters for a Gamma_2 code vector: ``(clipped,
+    total)`` where clipped counts entries outside the code range
+    ``[0, Delta]`` — i.e. inputs that violated the protocol's fixed
+    ``[zmin, zmax]`` clipping contract (Algorithm 1 line 3).  Gamma_2
+    does NOT clamp, so an out-of-range input silently produces an
+    off-range code and a wrong Theorem-1 dequantization; the health
+    monitor (``repro.obs.health``) watches these counters live."""
+    q = np.asarray(q)
+    clipped = int(np.count_nonzero((q < 0) | (q > spec.delta)))
+    return clipped, int(q.size)
+
+
+def gamma1_saturation(q, spec: QuantSpec) -> tuple[int, int]:
+    """Same counters for a Gamma_1 code vector, whose code range is
+    ``[0, Delta^2 / span]``."""
+    q = np.asarray(q)
+    hi = spec.delta ** 2 / spec.span
+    clipped = int(np.count_nonzero((q < 0) | (q > hi)))
+    return clipped, int(q.size)
+
+
 def quantize_tensor(u, spec: QuantSpec):
     """Plain per-tensor Gamma_2 with its own min/max (eq. 14 as printed);
     used by the gradient-compression path, returns (q, tmin, tmax)."""

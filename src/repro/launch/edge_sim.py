@@ -80,6 +80,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "(phase/launch/message/dispatch spans) plus the "
                          "embedded RunReport; inspect with "
                          "python -m repro.obs.report PATH")
+    ap.add_argument("--health", action="store_true",
+                    help="live protocol-health monitoring "
+                         "(repro.obs.health): MSE divergence/stall, "
+                         "quantizer saturation, stale/death storms, "
+                         "coalesce queue blowup; alerts appear in the "
+                         "summary and, with --trace, as 'alert' spans")
     return ap
 
 
@@ -139,7 +145,7 @@ def main(argv=None) -> dict:
         inst_A, inst_y, cfg, workload=wl,
         topology=topo_mod.make(args.topology, K),
         link=link, mode=args.mode, calib_path=args.calib_cache,
-        trace=tracer)
+        trace=tracer, health=args.health)
 
     rstats = r.stats["runtime"]
     # row-split consensus stacks K full-width copies: fold to one model
@@ -165,6 +171,8 @@ def main(argv=None) -> dict:
         summary["workload_metrics"] = wl.metrics(winst, r.x)
     if "dispatch" in rstats:
         summary["dispatch_choices"] = rstats["dispatch"]
+    if args.health:
+        summary["health"] = rstats["health"]
     if args.trace:
         chrome_trace.write(args.trace, tracer, run_report=r.stats)
         summary["trace"] = {"path": args.trace, "spans": len(tracer.spans)}

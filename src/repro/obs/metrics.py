@@ -103,6 +103,13 @@ class Registry:
 # ---------------------------------------------------------------------------
 
 _profile_events: list[dict] = []
+_profile_dropped = 0
+
+#: bound on the process-global log: sequential runs in one process (the
+#: serving scenario) must not grow it without limit between report
+#: builds; overflow drops the OLDEST events and is announced by a
+#: ``profile_overflow`` marker in the next snapshot
+PROFILE_LOG_CAP = 4096
 
 
 def record_profile(kind: str, **fields) -> None:
@@ -110,14 +117,29 @@ def record_profile(kind: str, **fields) -> None:
     compile-cache stats) to the process-global log.  Cheap: a dict append;
     callers fire unconditionally so cold-vs-warm jit costs are visible in
     every report."""
+    global _profile_dropped
+    if len(_profile_events) >= PROFILE_LOG_CAP:
+        del _profile_events[0]
+        _profile_dropped += 1
     _profile_events.append({"kind": kind, **fields})
 
 
 def profile_snapshot(clear: bool = False) -> list[dict]:
-    """The profiling events recorded so far (optionally draining them)."""
+    """The profiling events recorded so far (optionally draining them).
+
+    Each :func:`build_run_report` drains (``clear=True``), so one
+    process running many sequential protocol runs attributes each
+    warmup/calibration event to exactly one report instead of folding
+    earlier runs' events into every later report.
+    """
+    global _profile_dropped
     out = [dict(e) for e in _profile_events]
+    if _profile_dropped:
+        out.append({"kind": "profile_overflow",
+                    "dropped": _profile_dropped, "cap": PROFILE_LOG_CAP})
     if clear:
         _profile_events.clear()
+        _profile_dropped = 0
     return out
 
 
@@ -151,7 +173,16 @@ def build_run_report(*, driver: str, ops: dict, traffic: dict,
     coalescing, dispatch, trace) and is omitted for the synchronous
     reference driver.  The returned dict IS ``ProtocolResult.stats`` —
     existing consumers keep reading ``stats["ops"]`` etc. unchanged.
+
+    Every build DRAINS the process-global profiling log: the events land
+    in ``runtime["profile"]`` when a runtime section is present and are
+    discarded otherwise — either way, a report only ever carries events
+    recorded since the previous report in this process (the
+    two-runs-one-process leak fix, pinned in tests/test_obs.py).
     """
+    profile = profile_snapshot(clear=True)
+    if runtime is not None and "profile" not in runtime:
+        runtime["profile"] = profile
     churn = churn or {}
     report = {
         "schema_version": REPORT_SCHEMA_VERSION,

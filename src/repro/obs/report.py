@@ -8,9 +8,12 @@ Usage::
 ``run.json`` is either an exported chrome-trace file (``edge_sim
 --trace``: spans + embedded RunReport) or a bare RunReport JSON.  The
 single-file view prints the phase table (crypto ops + virtual duration),
-the coalescing/dispatch breakdown, latency distributions, and the top
-spans by measured kernel wall time; the two-file view diffs the core
-sections (ops, bytes, MSE) and compares the timing telemetry.
+the coalescing/dispatch breakdown, latency distributions, health alerts
+(``edge_sim --health``), and the top spans by measured kernel wall time;
+the two-file view diffs the core sections (ops, bytes, MSE) and compares
+the timing telemetry.  Diff mode exits 1 when the core sections differ
+(CI-gateable); ``--json`` switches either mode to machine-readable
+output.
 """
 from __future__ import annotations
 
@@ -133,6 +136,29 @@ def _top_spans(spans: list, n: int = 10) -> str:
     return _table(rows, ["span", "cat", "cost", "attrs"])
 
 
+def health_of(report: dict | None) -> dict | None:
+    """The ``health`` section wherever the driver put it: top-level for
+    the synchronous reference driver, under ``runtime`` for the
+    event-driven one (see ``repro.obs.health``)."""
+    if not report:
+        return None
+    return report.get("health") or report.get("runtime", {}).get("health")
+
+
+def _health_section(report: dict | None) -> list[str]:
+    h = health_of(report)
+    if not h:
+        return []
+    alerts = h.get("alerts", [])
+    lines = [f"health: alerts={len(alerts)} " +
+             " ".join(f"{k}={v}" for k, v in
+                      sorted(h.get("counters", {}).items()))]
+    for a in alerts:
+        lines.append(f"  ALERT {a.get('watcher')} @t={a.get('t')}: "
+                     f"{a.get('message')}")
+    return lines
+
+
 def summarize(report: dict | None, spans: list) -> str:
     out = []
     if report:
@@ -166,6 +192,10 @@ def summarize(report: dict | None, spans: list) -> str:
     disp = _dispatch_section(report, spans)
     if disp:
         out.extend(disp)
+    health = _health_section(report)
+    if health:
+        out.append("")
+        out.extend(health)
     top = _top_spans(spans)
     if top:
         out.append("")
@@ -209,6 +239,29 @@ def diff(a: dict | None, b: dict | None, name_a: str, name_b: str) -> str:
     return "\n".join(out)
 
 
+def summary_json(report: dict | None, spans: list) -> dict:
+    """Machine-readable single-run summary (``--json``)."""
+    rt = dict((report or {}).get("runtime", {}))
+    rt.pop("trace", None)       # spans are huge; count them instead
+    rt.pop("profile", None)
+    return {"kind": "summary",
+            "core": metrics.report_core(report) if report else None,
+            "runtime": rt or None,
+            "health": health_of(report),
+            "spans": len(spans)}
+
+
+def diff_json(a: dict | None, b: dict | None,
+              name_a: str, name_b: str) -> dict:
+    """Machine-readable A/B diff (``--json``)."""
+    core = [] if a is None or b is None \
+        else metrics.diff_reports(a, b, "A", "B")
+    return {"kind": "diff", "a": name_a, "b": name_b,
+            "loaded": a is not None and b is not None,
+            "core_identical": not core and a is not None and b is not None,
+            "core_diff": core}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
@@ -216,17 +269,27 @@ def main(argv=None) -> int:
     ap.add_argument("files", nargs="+",
                     help="one file to summarize, two to diff (trace JSON "
                          "from edge_sim --trace, or bare RunReport JSON)")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output for either mode")
     args = ap.parse_args(argv)
     if len(args.files) > 2:
         ap.error("pass one file (summary) or two (diff)")
     loaded = [load_any(p) for p in args.files]
     if len(loaded) == 1:
         report, spans = loaded[0]
-        print(summarize(report, spans))
+        if args.json:
+            print(json.dumps(summary_json(report, spans), indent=2))
+        else:
+            print(summarize(report, spans))
+        return 0
+    (ra, _), (rb, _) = loaded
+    doc = diff_json(ra, rb, args.files[0], args.files[1])
+    if args.json:
+        print(json.dumps(doc, indent=2))
     else:
-        (ra, _), (rb, _) = loaded
         print(diff(ra, rb, args.files[0], args.files[1]))
-    return 0
+    # CI gate: identical cores -> 0, anything else -> 1
+    return 0 if doc["core_identical"] else 1
 
 
 if __name__ == "__main__":

@@ -4,7 +4,8 @@ A :class:`Span` is one structured event on the run's timeline: a protocol
 phase, a crypto op, a coalesced kernel launch, a network message, a
 dispatch decision, a streaming re-share, a secure-aggregation round, or
 a churn event (leave / rejoin / fail injection / failure detection /
-recycled-update skip).
+recycled-update skip), or a health alert fired by a
+:class:`repro.obs.health.HealthMonitor` watcher.
 Spans carry the *virtual-clock* start/duration (the runtime's simulated
 seconds) plus, for real kernel launches, the measured host wall time —
 the two clocks are deliberately separate fields so determinism pins can
@@ -30,7 +31,7 @@ from typing import Iterable
 
 #: the closed set of span categories; chrome_trace gives each its own lane
 CATEGORIES = ("phase", "crypto_op", "launch", "message", "dispatch",
-              "reshare", "agg", "churn")
+              "reshare", "agg", "churn", "alert")
 
 
 @dataclasses.dataclass

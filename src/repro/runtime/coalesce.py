@@ -53,6 +53,7 @@ from ..core import paillier_batch as pbatch
 from ..core import paillier_vec as pv
 from ..core.cipher_tensor import CipherTensor
 from ..kernels import ops
+from ..obs import health as health_mod
 from ..obs import metrics as obs_metrics
 from ..obs import trace as trace_mod
 from .scheduler import Scheduler
@@ -123,7 +124,8 @@ def _split(data, sizes):
 class CoalesceQueue:
     def __init__(self, sched: Scheduler, box, counter=None,
                  tick_s: float = 1e-4, hold_ticks: int = 0,
-                 tracer: "trace_mod.Tracer | trace_mod.NullTracer" = trace_mod.NULL):
+                 tracer: "trace_mod.Tracer | trace_mod.NullTracer" = trace_mod.NULL,
+                 monitor=health_mod.NULL_MONITOR):
         self.sched = sched
         self.box = box
         self.counter = counter if counter is not None \
@@ -131,6 +133,7 @@ class CoalesceQueue:
         self.tick_s = tick_s
         self.hold_ticks = hold_ticks   # max ticks a lone op waits for company
         self.tracer = tracer
+        self.monitor = monitor     # health watcher for queue-depth blowup
         self.pending: dict[tuple, list[_Entry]] = {}
         self._flush_posted = False
         self._horizon_posted = False   # a hold-horizon event is in flight
@@ -156,6 +159,9 @@ class CoalesceQueue:
         phase = self.counter.phase if self.counter is not None else "?"
         entries = self.pending.setdefault((op, shape), [])
         entries.append(_Entry(args=args, phase=phase, cb=cb))
+        if self.monitor.enabled:
+            self.monitor.observe_queue_depth(
+                sum(len(es) for es in self.pending.values()))
         if not self._flush_posted:
             self._flush_posted = True
             self._post_flush()

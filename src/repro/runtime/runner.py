@@ -70,8 +70,11 @@ import numpy as np
 from ..analysis import roofline
 from ..core import paillier as gold
 from ..core import protocol
-from ..core.quantization import gamma1, gamma2, dequantize_theorem1
+from ..core.quantization import (gamma1, gamma2, gamma1_saturation,
+                                 gamma2_saturation, dequantize_theorem1)
 from ..kernels import compile_cache
+from ..obs import health as health_mod
+from ..obs import ledger as ledger_mod
 from ..obs import metrics as obs_metrics
 from ..obs import trace as trace_mod
 from . import dispatch
@@ -261,6 +264,9 @@ class MasterActor:
         rt.counter.phase = protocol.PHASE_SHARE
         for k in range(rt.cfg.K):
             q_alpha = np.asarray(gamma1(self.u3s[k], rt.cfg.spec))
+            if rt.monitor.enabled:
+                rt.monitor.observe_quant(
+                    -1, *gamma1_saturation(q_alpha, rt.cfg.spec))
             rt.cq.submit("enc", (q_alpha,), partial(self._share_ready, k))
 
     def _share_ready(self, k: int, c_alpha) -> None:
@@ -367,6 +373,10 @@ class MasterActor:
             self.w_cur[k] = float(np.sum(u1 + u2))
             qz = np.asarray(gamma2(u1, cfg.spec))
             qv = np.asarray(gamma2(u2, cfg.spec))
+            if rt.monitor.enabled:
+                cz, tz = gamma2_saturation(qz, cfg.spec)
+                cv2, tv2 = gamma2_saturation(qv, cfg.spec)
+                rt.monitor.observe_quant(t, cz + cv2, tz + tv2)
             if cfg.recycle and self.last_q[k] is not None \
                     and int(np.max(np.abs(qz - self.last_q[k][0]))) \
                     <= cfg.recycle_tol \
@@ -481,6 +491,8 @@ class MasterActor:
             if rt.tracer.enabled:
                 rt.tracer.add("churn:dead", "churn", t=rt.sched.now,
                               edge=k, round=t)
+            if rt.monitor.enabled:
+                rt.monitor.observe_death(t, k)
         self.must_wait.clear()
         self._finalize()
 
@@ -490,6 +502,7 @@ class MasterActor:
         self._x_new = np.zeros(cfg.K * rt.nk)
         self._n_dec = 0
         self._dec_target = len(self._round_edges)
+        stale_before = self.stale_events
         for k in range(cfg.K):
             sl = slice(k * rt.nk, (k + 1) * rt.nk)
             if k not in self.active:
@@ -510,6 +523,10 @@ class MasterActor:
                 fresh = False
             rt.cq.submit("dec", (x_hat,),
                          partial(self._dec_done, k, w_sum, fresh))
+        if rt.monitor.enabled:
+            rt.monitor.observe_stale(self.t,
+                                     self.stale_events - stale_before,
+                                     len(self._round_edges))
         if self._dec_target == 0:
             self._round_done()
 
@@ -539,6 +556,11 @@ class MasterActor:
             # the z-update aggregate of this round goes through secure
             # aggregation inside global_update below
             rt.tracer.add("secure_agg", "agg", t=rt.sched.now, round=self.t)
+        if rt.monitor.enabled:
+            # iterate step vs the (t-1) iterate, BEFORE the global update
+            # consumes it — the live convergence observable
+            rt.monitor.observe_round(self.t, float(np.mean(
+                (self._x_new - self.wst.x_prev) ** 2)))
         # master updates (10b)/(10c) with the (t-1) iterate — Jacobi order
         self.wl.global_update(self.wst, self._x_new)
         self.history[self.t] = self._x_new
@@ -560,7 +582,7 @@ class _Runtime:
 
     def __init__(self, sched, transport, cq, box, key, counter, cfg, nk,
                  mode, cost, stale_limit, tracer=trace_mod.NULL,
-                 fail_detect=3):
+                 fail_detect=3, monitor=health_mod.NULL_MONITOR):
         self.sched = sched
         self.transport = transport
         self.cq = cq
@@ -574,6 +596,7 @@ class _Runtime:
         self.stale_limit = stale_limit
         self.tracer = tracer
         self.fail_detect = fail_detect
+        self.monitor = monitor
         self.edge_actors: list = []   # filled by run_on_runtime (the
                                       # fault-injection handle for fails)
 
@@ -618,6 +641,7 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
                    calib_path: str | None = None,
                    coalesce_hold_ticks: "int | str" = 0,
                    trace: "bool | trace_mod.Tracer" = False,
+                   health: "bool | health_mod.HealthMonitor" = False,
                    ) -> "protocol.ProtocolResult":
     """Run 3P-ADMM-PC2 on the simulated edge network; see module docstring.
 
@@ -646,6 +670,14 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     iteration's ops).  0 (default) preserves flush-every-tick semantics;
     ``"auto"`` derives the horizon from the link-latency spread
     (:func:`auto_hold_ticks`) — pass an int to override the heuristic.
+
+    ``health`` may be ``True`` (allocate a fresh
+    :class:`repro.obs.health.HealthMonitor`) or a monitor instance —
+    live watchers for MSE divergence/stall, quantizer-range saturation,
+    stale/death storms and coalesce-queue blowup; fired alerts become
+    ``alert`` spans (when tracing) and a ``health`` section in the
+    report's ``runtime`` telemetry.  Default off: the
+    :class:`~repro.obs.health.NullMonitor` path is allocation-free.
     """
     rng = random.Random(cfg.seed)
     K = cfg.K
@@ -683,19 +715,24 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
     if topo.n_edges != K:
         raise ValueError(f"topology has {topo.n_edges} edges, cfg.K={K}")
     tracer = trace_mod.as_tracer(trace)
+    monitor = health_mod.as_monitor(health)
     sched = Scheduler(seed=cfg.seed)
+    if monitor.enabled:
+        monitor.bind(tracer, clock=lambda: sched.now)
     transport = Transport(sched, topo, default=link, per_link=per_link,
                           tracer=tracer)
     if coalesce_hold_ticks == "auto":
         coalesce_hold_ticks = auto_hold_ticks(topo, transport, tick_s)
     cq = CoalesceQueue(sched, box, counter=counter, tick_s=tick_s,
-                       hold_ticks=coalesce_hold_ticks, tracer=tracer)
+                       hold_ticks=coalesce_hold_ticks, tracer=tracer,
+                       monitor=monitor)
     if isinstance(box, dispatch.AdaptiveBox):
         box.tracer = tracer
         box.clock = lambda: sched.now
     cost = cost_model or dispatch.CostModel()
     rt = _Runtime(sched, transport, cq, box, key, counter, cfg, nk, mode,
-                  cost, stale_limit, tracer=tracer, fail_detect=fail_detect)
+                  cost, stale_limit, tracer=tracer, fail_detect=fail_detect,
+                  monitor=monitor)
 
     master = MasterActor(rt, np.asarray(A, np.float64),
                          np.asarray(y, np.float64), wl)
@@ -737,9 +774,8 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         "launches": cq.launches,
         "held_flushes": cq.held_flushes,
         "coalesce": cq.metrics_section(),
-        # process-level profiling since the previous report (warmup,
-        # calibration, compile-cache state)
-        "profile": obs_metrics.profile_snapshot(clear=True),
+        # "profile" (process-level events since the previous report) is
+        # filled by build_run_report, which drains the global log
         "compile_cache": compile_cache.stats(),
     }
     if key_bits is not None:
@@ -754,12 +790,17 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         # timing-free structured span signature — byte-identical across
         # seeded runs (the determinism pin in tests/test_runtime.py)
         runtime["trace"] = tracer.signature()
+    if monitor.enabled:
+        runtime["health"] = monitor.health_section()
     stats = obs_metrics.build_run_report(
         driver="runtime", ops=ops, traffic=traffic, key_bits=key_bits,
         cipher=cfg.cipher, workload=wl.name,
         reshare_events=master.reshare_events, history=master.history,
         churn={**master.churn_counts, "recycled": master.recycled},
         runtime=runtime)
+    # run-history ledger: one compact record per completed run (no-op
+    # when REPRO_LEDGER is off; never raises)
+    ledger_mod.record_run(stats, cfg=cfg, mode=mode)
     return protocol.ProtocolResult(
         x=master.wst.x_prev, history=master.history, stats=stats,
         stale_events=master.stale_events)

@@ -31,3 +31,15 @@ def run_subprocess(code: str, devices: int = 4, timeout: int = 600):
 @pytest.fixture
 def subproc():
     return run_subprocess
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _ledger_to_tmp(tmp_path_factory):
+    """Point the run-history ledger (repro.obs.ledger) at a session tmp
+    file so the ~350 protocol runs in the suite never pollute the user's
+    ``~/.cache/repro/ledger.jsonl``.  Tests that exercise the ledger
+    explicitly set their own ``REPRO_LEDGER`` via monkeypatch."""
+    if "REPRO_LEDGER" not in os.environ:
+        os.environ["REPRO_LEDGER"] = str(
+            tmp_path_factory.mktemp("ledger") / "ledger.jsonl")
+    yield

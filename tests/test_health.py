@@ -1,0 +1,253 @@
+"""Live protocol-health monitoring (repro.obs.health).
+
+The contract under test: the NullMonitor default is inert (no state, no
+cost), each watcher fires once with the right trigger, a bound tracer
+receives closed ``alert``-category spans on the virtual timeline, clean
+runs on BOTH drivers report zero alerts with bit-identical cores, and
+injected anomalies (quantizer saturation, a deadline fail storm) surface
+as alerts + a populated ``health`` section.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from repro.core import protocol
+from repro.core.churn import ChurnSchedule
+from repro.core.quantization import (QuantSpec, gamma1, gamma2,
+                                     gamma1_saturation, gamma2_saturation)
+from repro.obs import health, metrics, trace as trace_mod
+from repro.runtime.runner import run_on_runtime
+
+SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+
+
+def _inst(seed=1, m=24, n=32):
+    from repro.data.synthetic import make_lasso
+    return make_lasso(m, n, sparsity=0.1, noise=0.01, seed=seed)
+
+
+def _cfg(**kw):
+    base = dict(K=4, lam=0.05, iters=2, spec=SPEC, cipher="plain",
+                seed=0, workload="lasso")
+    base.update(kw)
+    return protocol.ProtocolConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# monitor plumbing
+# ---------------------------------------------------------------------------
+
+def test_null_monitor_is_inert():
+    m = health.NULL_MONITOR
+    assert m.enabled is False
+    m.observe_round(0, 1.0)
+    m.observe_quant(0, 5, 10)
+    m.observe_stale(0, 3, 4)
+    m.observe_death(0, 1)
+    m.observe_queue_depth(10 ** 9)
+    assert m.health_section() == {"alerts": [], "counters": {}}
+    assert m.alerts == ()
+
+
+def test_as_monitor_normalizes():
+    assert health.as_monitor(False) is health.NULL_MONITOR
+    assert health.as_monitor(None) is health.NULL_MONITOR
+    m = health.as_monitor(True)
+    assert isinstance(m, health.HealthMonitor) and m.enabled
+    assert health.as_monitor(m) is m
+    null = health.NullMonitor()
+    assert health.as_monitor(null) is null
+
+
+def test_thresholds_reject_unknown_keys():
+    health.Thresholds(stall_window=3)
+    with pytest.raises(TypeError, match="unknown health threshold"):
+        health.Thresholds(stall_windows=3)
+
+
+def test_alerts_fire_once_per_watcher_with_spans():
+    tracer = trace_mod.Tracer()
+    clock = {"t": 0.0}
+    m = health.HealthMonitor(health.Thresholds(queue_depth=4))
+    m.bind(tracer, lambda: clock["t"])
+    clock["t"] = 2.5
+    m.observe_queue_depth(4)
+    m.observe_queue_depth(9)           # deduplicated: still one alert
+    assert len(m.alerts) == 1
+    a = m.alerts[0]
+    assert a["watcher"] == "queue_blowup" and a["t"] == 2.5
+    assert tracer.count("alert") == 1
+    span = [s for s in tracer.spans if s.cat == "alert"][0]
+    assert span.name == "alert:queue_blowup" and span.t == 2.5
+    assert m.counters["max_queue_depth"] == 9
+    # the section is JSON-safe
+    json.dumps(m.health_section())
+
+
+# ---------------------------------------------------------------------------
+# watcher unit behavior
+# ---------------------------------------------------------------------------
+
+def test_mse_divergence_watcher():
+    m = health.HealthMonitor()
+    m.observe_round(0, 1.0)
+    m.observe_round(1, 0.01)
+    m.observe_round(2, 0.02)           # mild rebound: no alert
+    assert not m.alerts
+    m.observe_round(3, 5.0)            # 500x the running min
+    assert [a["watcher"] for a in m.alerts] == ["mse_divergence"]
+    assert m.counters["rounds"] == 4
+
+
+def test_mse_stall_watcher():
+    m = health.HealthMonitor(health.Thresholds(stall_window=3,
+                                               divergence_factor=1e9))
+    m.observe_round(0, 1.0)
+    for t in range(1, 5):
+        m.observe_round(t, 1.0)        # never improves
+    assert [a["watcher"] for a in m.alerts] == ["mse_stall"]
+    # an improving run never stalls
+    m2 = health.HealthMonitor(health.Thresholds(stall_window=3))
+    for t in range(12):
+        m2.observe_round(t, 1.0 / (t + 1))
+    assert not m2.alerts
+
+
+def test_quant_saturation_watcher():
+    m = health.HealthMonitor()
+    m.observe_quant(0, 0, 1000)        # clean encode
+    assert not m.alerts
+    m.observe_quant(1, 50, 1000)       # 5% >= 1% threshold
+    assert [a["watcher"] for a in m.alerts] == ["quant_saturation"]
+    assert m.counters["quant_encodes"] == 2
+    assert m.counters["quant_clipped_values"] == 50
+
+
+def test_stale_storm_needs_consecutive_rounds():
+    m = health.HealthMonitor(health.Thresholds(stale_rounds=2))
+    m.observe_stale(0, 3, 4)
+    m.observe_stale(1, 0, 4)           # streak broken
+    m.observe_stale(2, 3, 4)
+    assert not m.alerts
+    m.observe_stale(3, 4, 4)           # second consecutive storm round
+    assert [a["watcher"] for a in m.alerts] == ["stale_storm"]
+    assert m.counters["stale_substitutions"] == 10
+
+
+def test_death_storm_window():
+    m = health.HealthMonitor()         # death_count=2 within 4 rounds
+    m.observe_death(0, 0)
+    m.observe_death(10, 1)             # far apart: no storm
+    assert not m.alerts
+    m.observe_death(12, 2)
+    assert [a["watcher"] for a in m.alerts] == ["death_storm"]
+    assert m.counters["deaths"] == 3
+
+
+def test_gamma_saturation_counters():
+    """The quantization-side helpers the monitor hooks consume: Gamma
+    does NOT clamp, so out-of-range inputs produce off-range codes that
+    the counters detect (and in-range inputs never do)."""
+    ok = np.linspace(SPEC.zmin, SPEC.zmax, 64)
+    assert gamma2_saturation(gamma2(ok, SPEC), SPEC) == (0, 64)
+    assert gamma1_saturation(gamma1(ok, SPEC), SPEC) == (0, 64)
+    bad = np.array([SPEC.zmin - 1.0, 0.0, SPEC.zmax + 1.0])
+    assert gamma2_saturation(gamma2(bad, SPEC), SPEC) == (2, 3)
+    assert gamma1_saturation(gamma1(bad, SPEC), SPEC) == (2, 3)
+
+
+# ---------------------------------------------------------------------------
+# driver integration
+# ---------------------------------------------------------------------------
+
+def test_clean_runs_have_no_alerts_and_identical_cores():
+    """Monitoring ON for a clean sync pair: zero alerts, matching
+    counters across drivers, and the report cores stay bit-identical —
+    on both sides of the monitored/unmonitored split."""
+    inst = _inst()
+    cfg = _cfg()
+    rp_plain = protocol.run_protocol(inst.A, inst.y, cfg)
+    rp = protocol.run_protocol(inst.A, inst.y, cfg, health=True)
+    rr = run_on_runtime(inst.A, inst.y, cfg, health=True)
+    hp, hr = rp.stats["health"], rr.stats["runtime"]["health"]
+    assert hp["alerts"] == [] and hr["alerts"] == []
+    assert hp["counters"]["rounds"] == hr["counters"]["rounds"] == cfg.iters
+    assert (hp["counters"]["quant_encodes"]
+            == hr["counters"]["quant_encodes"] > 0)
+    assert metrics.reports_equal_modulo_timing(rp_plain.stats, rp.stats)
+    assert metrics.reports_equal_modulo_timing(rp_plain.stats, rr.stats)
+    # the health section lives OUTSIDE the core sections
+    assert "health" not in metrics.report_core(rp.stats)
+
+
+def test_injected_saturation_fires_on_both_drivers():
+    """A quantization range that violates the clipping contract: both
+    drivers' monitors catch it, and the runtime driver also lands an
+    ``alert`` span in the trace (the acceptance anomaly injection)."""
+    inst = _inst()
+    bad_spec = QuantSpec(delta=1e6, zmin=-1e-3, zmax=1e-3)
+    cfg = _cfg(spec=bad_spec)
+    rp = protocol.run_protocol(inst.A, inst.y, cfg, health=True)
+    tracer = trace_mod.Tracer()
+    rr = run_on_runtime(inst.A, inst.y, cfg, health=True, trace=tracer)
+    for h in (rp.stats["health"], rr.stats["runtime"]["health"]):
+        assert "quant_saturation" in [a["watcher"] for a in h["alerts"]]
+        assert h["counters"]["quant_clipped_values"] > 0
+    assert tracer.count("alert") >= 1
+    names = {s.name for s in tracer.spans if s.cat == "alert"}
+    assert "alert:quant_saturation" in names
+    # alert spans export cleanly (the new category is in CATEGORIES)
+    from repro.obs import chrome_trace
+    doc = chrome_trace.to_chrome(tracer.spans, run_report=rr.stats)
+    assert chrome_trace.validate(doc) == []
+
+
+def test_deadline_fail_storm_fires_death_alert():
+    """Two silent crashes, no rejoin: the probe chain declares both
+    edges dead within the storm window → ``death_storm`` alert."""
+    inst = _inst(n=48)
+    churn = ChurnSchedule(4, [(2, 0, "fail"), (2, 1, "fail")])
+    cfg = _cfg(K=4, iters=12, deadline=1.0, churn=churn,
+               latency_fn=lambda k, t: 0.0)
+    tracer = trace_mod.Tracer()
+    r = run_on_runtime(inst.A, inst.y, cfg, health=True, trace=tracer)
+    h = r.stats["runtime"]["health"]
+    watchers = [a["watcher"] for a in h["alerts"]]
+    assert "death_storm" in watchers
+    assert h["counters"]["deaths"] == 2
+    assert h["counters"]["stale_substitutions"] > 0
+    assert "alert:death_storm" in {s.name for s in tracer.spans
+                                   if s.cat == "alert"}
+
+
+def test_monitoring_keeps_runtime_deterministic():
+    """The monitor must not perturb the virtual-clock event stream: a
+    monitored run replays an unmonitored run's history bit-identically
+    and keeps the tracer signature (wall-independent) identical."""
+    inst = _inst()
+    cfg = _cfg(iters=4)
+    t0, t1 = trace_mod.Tracer(), trace_mod.Tracer()
+    r0 = run_on_runtime(inst.A, inst.y, cfg, trace=t0)
+    r1 = run_on_runtime(inst.A, inst.y, cfg, trace=t1, health=True)
+    assert np.array_equal(r0.history, r1.history)
+    assert t0.signature() == t1.signature()
+
+
+def test_edge_sim_health_flag(subproc):
+    out = subproc("""
+        import json, sys
+        from repro.launch import edge_sim
+        s = edge_sim.main(["--edges", "3", "--iters", "3",
+                           "--backend", "plain", "--health"])
+        assert s["health"]["alerts"] == []
+        assert s["health"]["counters"]["rounds"] == 3
+        print("EDGE_SIM_HEALTH_OK")
+    """, devices=1)
+    assert "EDGE_SIM_HEALTH_OK" in out

@@ -1,0 +1,337 @@
+"""Run-history ledger + regression sentinel + CI gate.
+
+Covers: the append-only JSONL store (env-controlled path, corrupt-line
+tolerance, config-key grouping, baseline windows), the stable core
+signature (bit-identical cores hash identically; any core change moves
+the hash), automatic recording from both protocol drivers and the bench
+harness, the sentinel's robust-band checks and exit codes (0 clean /
+1 finding / 2 disabled) against clean and doctored ledgers, the
+``scripts.check_regression`` all-groups CI gate, and the ledger lint arm
+of ``scripts.check_bench_schema``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from repro.core import protocol
+from repro.core.quantization import QuantSpec
+from repro.obs import ledger, metrics, sentinel
+from repro.runtime.runner import run_on_runtime
+from scripts import check_bench_schema, check_regression
+
+SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+
+
+def _inst():
+    from repro.data.synthetic import make_lasso
+    return make_lasso(24, 32, sparsity=0.1, noise=0.01, seed=1)
+
+
+def _cfg(**kw):
+    base = dict(K=4, lam=0.05, iters=2, spec=SPEC, cipher="plain",
+                seed=0, workload="lasso")
+    base.update(kw)
+    return protocol.ProtocolConfig(**base)
+
+
+def _report(**over):
+    base = dict(driver="runtime", ops={"share": {"enc": 4}},
+                traffic={"edge->master": 100}, key_bits=128,
+                cipher="gold", workload="lasso", reshare_events=0,
+                history=__import__("numpy").arange(12.0).reshape(3, 4),
+                runtime={"virtual_time": 2.0, "events": 10})
+    base.update(over)
+    return metrics.build_run_report(**base)
+
+
+# ---------------------------------------------------------------------------
+# path / enablement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("raw", ["", "0", "off", "none", "disabled", " OFF "])
+def test_ledger_disabled_values(monkeypatch, raw):
+    monkeypatch.setenv("REPRO_LEDGER", raw)
+    assert ledger.ledger_path() is None
+    assert ledger.append({"v": 1}) is False
+    assert ledger.load() == []
+
+
+def test_ledger_path_override(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_LEDGER", str(tmp_path / "l.jsonl"))
+    assert ledger.ledger_path() == str(tmp_path / "l.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# core signature
+# ---------------------------------------------------------------------------
+
+def test_core_signature_stable_and_sensitive():
+    a, b = _report(), _report()
+    assert ledger.core_signature(a) == ledger.core_signature(b)
+    assert len(ledger.core_signature(a)) == 16
+    # timing/telemetry changes don't move the hash ...
+    c = _report(runtime={"virtual_time": 99.0, "events": 1})
+    assert ledger.core_signature(c) == ledger.core_signature(a)
+    # ... core changes do
+    d = _report(traffic={"edge->master": 101})
+    assert ledger.core_signature(d) != ledger.core_signature(a)
+
+
+def test_env_fingerprint_axes():
+    env = ledger.env_fingerprint()
+    for key in ("device", "reduce_impl", "jax", "numpy", "python", "git"):
+        assert key in env
+    json.dumps(env)                     # JSON-safe
+
+
+# ---------------------------------------------------------------------------
+# records, append/load, query, baselines
+# ---------------------------------------------------------------------------
+
+def test_record_from_report_fields():
+    rec = ledger.record_from_report(_report(), cfg=_cfg(), mode="sync")
+    assert rec["v"] == ledger.LEDGER_SCHEMA_VERSION
+    assert rec["kind"] == "run" and rec["mode"] == "sync"
+    assert rec["K"] == 4 and rec["iters"] == 2 and rec["seed"] == 0
+    assert rec["workload"] == "lasso" and rec["cipher"] == "gold"
+    assert rec["rounds"] == 3 and "mse_round0" in rec
+    assert rec["virtual_time"] == 2.0
+    assert rec["rounds_per_sec"] == pytest.approx(1.5)
+    assert len(rec["core_sig"]) == 16
+
+
+def test_append_load_roundtrip_and_corrupt_lines(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    r1 = ledger.record_bench_row("tab2", "modexp_128", 12.5, "ops=3")
+    r2 = ledger.record_bench_row("tab2", "modexp_128", 13.0, "ops=3")
+    assert ledger.append(r1, path) and ledger.append(r2, path)
+    with open(path, "a") as f:
+        f.write("{corrupt\n\n[1,2]\n")  # junk lines must not break load
+    recs = ledger.load(path)
+    assert [r["us_per_call"] for r in recs] == [12.5, 13.0]
+    assert recs[0]["seq"] != recs[1]["seq"]
+
+
+def test_config_key_and_query():
+    run_a = ledger.record_from_report(_report(), cfg=_cfg(), mode="sync")
+    run_b = ledger.record_from_report(_report(), cfg=_cfg(), mode="sync")
+    run_c = ledger.record_from_report(_report(cipher="plain"),
+                                      cfg=_cfg(), mode="sync")
+    bench = ledger.record_bench_row("tab2", "modexp_128", 12.5)
+    assert ledger.config_key(run_a) == ledger.config_key(run_b)
+    assert ledger.config_key(run_a) != ledger.config_key(run_c)
+    assert ledger.config_key(bench) == ("bench", "tab2", "modexp_128")
+    recs = [run_a, run_b, run_c, bench]
+    assert ledger.query(recs, kind="run", cipher="gold") == [run_a, run_b]
+    assert ledger.query(recs, kind="bench") == [bench]
+    assert ledger.query(recs, kind="run", last=1) == [run_c]
+
+
+def test_baseline_for_excludes_self_and_windows():
+    recs = [ledger.record_from_report(_report(), cfg=_cfg(), mode="sync")
+            for _ in range(5)]
+    base = ledger.baseline_for(recs[-1], recs)
+    assert len(base) == 4 and recs[-1] not in base
+    assert ledger.baseline_for(recs[-1], recs, last=2) == recs[2:4]
+
+
+# ---------------------------------------------------------------------------
+# driver + bench integration
+# ---------------------------------------------------------------------------
+
+def test_two_consecutive_runs_append_distinct_records(monkeypatch,
+                                                      tmp_path):
+    """Acceptance: consecutive same-config runs append records that are
+    distinct (seq/ts) yet share the core signature — on both drivers."""
+    path = str(tmp_path / "ledger.jsonl")
+    monkeypatch.setenv("REPRO_LEDGER", path)
+    inst, cfg = _inst(), _cfg()
+    protocol.run_protocol(inst.A, inst.y, cfg)
+    protocol.run_protocol(inst.A, inst.y, cfg)
+    run_on_runtime(inst.A, inst.y, cfg)
+    recs = ledger.load(path)
+    assert len(recs) == 3
+    sync = [r for r in recs if r["driver"] == "protocol"]
+    assert len(sync) == 2 and sync[0]["seq"] != sync[1]["seq"]
+    assert sync[0]["core_sig"] == sync[1]["core_sig"]
+    assert recs[2]["driver"] == "runtime"
+    # same config key for the sync pair; driver splits the runtime one
+    assert ledger.config_key(sync[0]) == ledger.config_key(sync[1])
+    assert ledger.config_key(recs[2]) != ledger.config_key(sync[0])
+
+
+def test_bench_harness_rows_append(monkeypatch, tmp_path):
+    from benchmarks.run import _ledger_rows
+    path = str(tmp_path / "ledger.jsonl")
+    monkeypatch.setenv("REPRO_LEDGER", path)
+    _ledger_rows("tab2", ["modexp_128,12.5,ops=3",
+                          "tab2_ERROR,0,RuntimeError:boom",
+                          "not a csv row",
+                          "modmult_128,3.25,ops=9"])
+    recs = ledger.load(path)
+    assert [(r["name"], r["us_per_call"]) for r in recs] == \
+        [("modexp_128", 12.5), ("modmult_128", 3.25)]
+    assert all(r["kind"] == "bench" and r["bench"] == "tab2"
+               for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# sentinel
+# ---------------------------------------------------------------------------
+
+def test_robust_band_floors():
+    med, lo, hi = sentinel.robust_band([10.0, 10.0, 10.0, 10.0])
+    assert med == 10.0 and lo == 7.5 and hi == 12.5   # rel_floor kicks in
+    med, lo, hi = sentinel.robust_band([8.0, 10.0, 12.0])
+    assert lo < 8.0 < 12.0 < hi                        # MAD band
+
+
+def _seeded_ledger(tmp_path, n=4):
+    """A clean ledger: n identical-config run records + bench rows."""
+    path = str(tmp_path / "ledger.jsonl")
+    for i in range(n):
+        rec = ledger.record_from_report(_report(), cfg=_cfg(), mode="sync")
+        rec["warm_launch_wall_ms"] = {"enc": {"p50": 1.0 + 0.01 * i,
+                                              "p95": 2.0 + 0.01 * i,
+                                              "n": 8}}
+        ledger.append(rec, path)
+        ledger.append(ledger.record_bench_row("tab2", "modexp_128",
+                                              12.5 + 0.1 * i), path)
+    return path
+
+
+def test_sentinel_clean_against_own_baseline(tmp_path, capsys):
+    path = _seeded_ledger(tmp_path)
+    assert sentinel.main(["--ledger", path]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_sentinel_flags_doctored_walls_and_core_sig(tmp_path, capsys):
+    path = _seeded_ledger(tmp_path)
+    recs = ledger.load(path)
+    bad = dict(recs[-2])               # newest run record
+    bad["core_sig"] = "0" * 16
+    bad["warm_launch_wall_ms"] = {"enc": {"p50": 3.0, "p95": 6.0, "n": 8}}
+    bad["seq"] = 999
+    ledger.append(bad, path)
+    rc = sentinel.main(["--ledger", path, "--json"])
+    assert rc == 1
+    doc = json.loads(capsys.readouterr().out)
+    checks = {f["check"] for f in doc["findings"]}
+    metrics_flagged = {f["metric"] for f in doc["findings"]}
+    assert "correctness" in checks and "perf" in checks
+    assert "core_sig" in metrics_flagged
+    assert "warm_launch_wall_ms.enc.p95" in metrics_flagged
+
+
+def test_sentinel_convergence_and_rounds_per_sec(tmp_path):
+    path = _seeded_ledger(tmp_path)
+    recs = ledger.load(path)
+    bad = dict(recs[-2])
+    bad["mse_round0"] = bad["mse_round0"] * 1000 + 1.0
+    bad["rounds_per_sec"] = bad["rounds_per_sec"] / 100.0
+    bad["seq"] = 999
+    ledger.append(bad, path)
+    _, findings = sentinel.check_latest(ledger.load(path))
+    flagged = {f["metric"] for f in findings}
+    assert "mse_round0" in flagged and "rounds_per_sec" in flagged
+
+
+def test_sentinel_first_run_cannot_regress(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    ledger.append(ledger.record_from_report(_report(), cfg=_cfg(),
+                                            mode="sync"), path)
+    assert sentinel.main(["--ledger", path]) == 0
+
+
+def test_sentinel_exit_codes_empty_and_disabled(monkeypatch, tmp_path):
+    assert sentinel.main(["--ledger", str(tmp_path / "nope.jsonl")]) == 0
+    monkeypatch.setenv("REPRO_LEDGER", "off")
+    assert sentinel.main([]) == 2
+
+
+def test_sentinel_small_jitter_never_flags(tmp_path):
+    """Sub-floor wall jitter (the CI false-positive hazard): 3x on a
+    0.01 ms wall stays under the absolute floor and must NOT flag."""
+    path = str(tmp_path / "ledger.jsonl")
+    for i in range(4):
+        rec = ledger.record_from_report(_report(), cfg=_cfg(), mode="sync")
+        rec["warm_launch_wall_ms"] = {"enc": {"p50": 0.01, "p95": 0.012,
+                                              "n": 8}}
+        ledger.append(rec, path)
+    recs = ledger.load(path)
+    bad = dict(recs[-1])
+    bad["warm_launch_wall_ms"] = {"enc": {"p50": 0.03, "p95": 0.036,
+                                          "n": 8}}
+    bad["seq"] = 999
+    ledger.append(bad, path)
+    _, findings = sentinel.check_latest(ledger.load(path))
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# CI gate: scripts.check_regression
+# ---------------------------------------------------------------------------
+
+def test_check_regression_all_groups(tmp_path, capsys):
+    path = _seeded_ledger(tmp_path)
+    assert check_regression.main(["--ledger", path]) == 0
+    out = capsys.readouterr().out
+    assert "2 config group(s), 0 flagged" in out
+    # doctor the RUN group only; the bench group must stay clean
+    recs = ledger.load(path)
+    bad = dict(next(r for r in reversed(recs) if r["kind"] == "run"))
+    bad["core_sig"] = "f" * 16
+    bad["seq"] = 999
+    ledger.append(bad, path)
+    assert check_regression.main(["--ledger", path]) == 1
+    results = check_regression.check_all(ledger.load(path))
+    flagged = [r for r in results if r["findings"]]
+    assert len(flagged) == 1
+    assert flagged[0]["findings"][0]["check"] == "correctness"
+
+
+def test_check_regression_disabled(monkeypatch):
+    monkeypatch.setenv("REPRO_LEDGER", "off")
+    assert check_regression.main([]) == 2
+
+
+# ---------------------------------------------------------------------------
+# schema lint: ledger arm of scripts.check_bench_schema
+# ---------------------------------------------------------------------------
+
+def test_ledger_lint_clean(tmp_path):
+    path = _seeded_ledger(tmp_path)
+    assert check_bench_schema.check_path(pathlib.Path(path)) == []
+
+
+def test_ledger_lint_flags_bad_records(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    lines = [
+        json.dumps({"v": 99, "kind": "run", "ts": 1.0,
+                    "schema_version": 1, "core_sig": "a" * 16}),
+        json.dumps({"v": 1, "kind": "mystery", "ts": 1.0}),
+        json.dumps({"v": 1, "kind": "run", "ts": 1.0,
+                    "schema_version": 1, "core_sig": "xyz"}),
+        json.dumps({"v": 1, "kind": "bench", "ts": 1.0, "bench": "tab2"}),
+        "{corrupt",
+    ]
+    path.write_text("\n".join(lines) + "\n")
+    errors = check_bench_schema.check_path(path)
+    assert len(errors) >= 5
+    text = "\n".join(errors)
+    assert "envelope" in text and "unknown record kind" in text
+    assert "core_sig" in text and "us_per_call" in text
+    assert "corrupt JSON line" in text
+
+
+def test_ledger_lint_via_main(tmp_path, monkeypatch, capsys):
+    path = _seeded_ledger(tmp_path)
+    assert check_bench_schema.main([path]) == 0
+    assert "OK" in capsys.readouterr().out

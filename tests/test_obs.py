@@ -289,3 +289,163 @@ def test_check_bench_schema_accepts_and_rejects(tmp_path, traced_run):
     bad_trace.write_text(json.dumps(doc))
     assert any("bogus" in e
                for e in check_bench_schema.check_path(bad_trace))
+
+# ---------------------------------------------------------------------------
+# report-core validation + diff edge cases
+# ---------------------------------------------------------------------------
+
+def _minimal_report():
+    return metrics.build_run_report(
+        driver="protocol", ops={"iterate": {"enc": 4}},
+        traffic={"edge->master": 10}, key_bits=None, cipher="plain",
+        workload="lasso", reshare_events=0,
+        history=np.array([[1.0, 0.0], [0.0, 0.0]]))
+
+
+def test_validate_report_core_rejections():
+    good = _minimal_report()
+    assert metrics.validate_report_core(good) == []
+
+    wrong_version = dict(good, schema_version=99)
+    assert any("schema_version" in e
+               for e in metrics.validate_report_core(wrong_version))
+
+    ill_ops = dict(good, ops={"iterate": {"enc": "four"}})
+    errs = metrics.validate_report_core(ill_ops)
+    assert any("ops['iterate']" in e for e in errs)
+    ill_phase = dict(good, ops={"iterate": ["enc"]})
+    assert any("ops['iterate']" in e
+               for e in metrics.validate_report_core(ill_phase))
+
+    bad_churn = dict(good, churn={"leaves": 1})          # missing keys
+    assert any("churn" in e
+               for e in metrics.validate_report_core(bad_churn))
+    bad_churn2 = dict(good, churn={k: 0.5 for k in metrics.CHURN_KEYS})
+    assert any("churn" in e
+               for e in metrics.validate_report_core(bad_churn2))
+
+    assert metrics.validate_report_core("nope") == ["report: not a dict"]
+    for key in ("ops", "traffic_bytes", "mse_trajectory", "workload",
+                "cipher"):
+        broken = {k: v for k, v in good.items() if k != key}
+        assert any(key in e
+                   for e in metrics.validate_report_core(broken))
+
+
+def test_diff_reports_asymmetric():
+    a = _minimal_report()
+    # one side carrying a runtime section is NOT a core difference
+    b = dict(a, runtime={"virtual_time": 1.0})
+    assert metrics.diff_reports(a, b) == []
+    assert metrics.reports_equal_modulo_timing(a, b)
+    # empty vs non-empty trajectory renders without crashing
+    c = dict(a, mse_trajectory=[])
+    lines = metrics.diff_reports(a, c, "A", "B")
+    assert any("mse_trajectory" in line for line in lines)
+    # dict-valued sections diff per-key
+    d = dict(a, traffic_bytes={"edge->master": 11, "master->edge": 5})
+    lines = metrics.diff_reports(a, d, "A", "B")
+    assert any("traffic_bytes.edge->master" in line for line in lines)
+    assert any("traffic_bytes.master->edge" in line for line in lines)
+
+
+# ---------------------------------------------------------------------------
+# report CLI: --json + the nonzero diff exit (CI gate)
+# ---------------------------------------------------------------------------
+
+def test_report_cli_json_and_diff_exit(traced_run, tmp_path, capsys):
+    _, _, path = traced_run
+    assert report_cli.main([str(path), "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["kind"] == "summary"
+    assert doc["core"]["workload"] == "lasso"
+    assert doc["spans"] > 0
+    assert "trace" not in (doc["runtime"] or {})
+
+    # identical pair: exit 0; doctored core: exit 1 in both output modes
+    same = tmp_path / "same.trace.json"
+    same.write_text(path.read_text())
+    assert report_cli.main([str(path), str(same)]) == 0
+    capsys.readouterr()
+    broken = json.loads(path.read_text())
+    broken["runReport"]["traffic_bytes"]["edge->master"] += 1
+    other = tmp_path / "b.trace.json"
+    other.write_text(json.dumps(broken))
+    assert report_cli.main([str(path), str(other)]) == 1
+    assert "core sections differ" in capsys.readouterr().out
+    assert report_cli.main([str(path), str(other), "--json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["kind"] == "diff" and doc["core_identical"] is False
+    assert any("traffic_bytes" in line for line in doc["core_diff"])
+
+    # a bare report on one side, no report on the other: also nonzero
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps(_minimal_report()))
+    empty = tmp_path / "empty.trace.json"
+    empty.write_text(json.dumps({"traceEvents": []}))
+    assert report_cli.main([str(bare), str(empty)]) == 1
+
+
+def test_report_cli_renders_health_section(tmp_path, capsys):
+    rep = _minimal_report()
+    rep["health"] = {"alerts": [{"watcher": "mse_stall", "t": 1.0,
+                                 "message": "no improvement"}],
+                     "counters": {"rounds": 2}}
+    p = tmp_path / "health.json"
+    p.write_text(json.dumps(rep))
+    assert report_cli.main([str(p)]) == 0
+    out = capsys.readouterr().out
+    assert "health: alerts=1" in out and "ALERT mse_stall" in out
+    assert report_cli.main([str(p), "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["health"]["counters"]["rounds"] == 2
+
+
+# ---------------------------------------------------------------------------
+# process-global profile log: the two-runs-one-process leak fix
+# ---------------------------------------------------------------------------
+
+def test_profile_log_drains_per_report():
+    """Regression: sequential runs in one process each get ONLY their
+    own profiling events — and sync-driver builds (no runtime section)
+    still drain the log so it can't leak into a later runtime report."""
+    metrics.profile_snapshot(clear=True)            # isolate from suite
+    metrics.record_profile("warmup", op="enc")
+    rt1: dict = {}
+    metrics.build_run_report(
+        driver="runtime", ops={}, traffic={}, key_bits=None,
+        cipher="plain", workload="lasso", reshare_events=0,
+        history=np.zeros((1, 2)), runtime=rt1)
+    assert [e["kind"] for e in rt1["profile"]] == ["warmup"]
+
+    rt2: dict = {}
+    metrics.build_run_report(
+        driver="runtime", ops={}, traffic={}, key_bits=None,
+        cipher="plain", workload="lasso", reshare_events=0,
+        history=np.zeros((1, 2)), runtime=rt2)
+    assert rt2["profile"] == []                     # nothing leaked
+
+    metrics.record_profile("calib", op="dec")
+    _minimal_report()                               # sync build drains too
+    rt3: dict = {}
+    metrics.build_run_report(
+        driver="runtime", ops={}, traffic={}, key_bits=None,
+        cipher="plain", workload="lasso", reshare_events=0,
+        history=np.zeros((1, 2)), runtime=rt3)
+    assert rt3["profile"] == []
+
+
+def test_profile_log_cap_and_overflow_marker():
+    metrics.profile_snapshot(clear=True)
+    for i in range(metrics.PROFILE_LOG_CAP + 5):
+        metrics.record_profile("warmup", i=i)
+    snap = metrics.profile_snapshot(clear=True)
+    assert len(snap) == metrics.PROFILE_LOG_CAP + 1  # + overflow marker
+    marker = snap[-1]
+    assert marker["kind"] == "profile_overflow" and marker["dropped"] == 5
+    # oldest events were the ones dropped
+    assert snap[0]["i"] == 5
+    # the drain reset the drop counter
+    metrics.record_profile("warmup", i=0)
+    snap2 = metrics.profile_snapshot(clear=True)
+    assert [e["kind"] for e in snap2] == ["warmup"]
