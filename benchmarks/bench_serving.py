@@ -1,0 +1,196 @@
+"""Multi-tenant serving: cross-tenant coalescing vs sequential admission.
+
+Beyond-paper: the paper parallelizes "encryption and decryption
+computations with long keys" within one protocol run; the serving engine
+(``repro.serve.protocol_engine``) pushes the same amortization across
+MANY runs — T tenant protocol instances share one virtual clock and one
+launch queue, and same-shaped Paillier ops fuse into single multi-modulus
+limb launches (``repro.core.paillier_batch.enc_rows`` and friends).
+
+For each tenant count T the bench runs the SAME tenant fleet (identical
+LASSO instance, per-tenant seeds 0..T-1, scalar-int gold cipher) through
+two engine arms:
+
+* **sequential** — one tenant at a time on the shared clock: every launch
+  is single-tenant, the solo baseline an operator without the engine
+  would schedule;
+* **coalesced** — all T admitted concurrently: per-tick clusters fuse
+  across tenants into one rows launch per (op, limb-width).
+
+The row records WALL aggregate rounds/sec for both arms and their ratio
+(``speedup_vs_sequential`` — the headline; asserted >= 1.2x at T=64 and
+lint-enforced by scripts/check_bench_schema.py), plus fusion counters and
+the cross-tenant p50/p95 per-tenant round latency.  ``bit_exact`` pins
+the isolation invariant INSIDE the bench: every tenant's RunReport core
+must equal its solo ``run_on_runtime`` reference bit-for-bit (modulo
+timing) in BOTH arms, with bit-identical iterate histories — a speedup
+that perturbs any tenant's math is a bug, not a win.
+
+Emits ``BENCH_serving.json`` + harness CSV rows.  Run directly::
+
+  PYTHONPATH=src python benchmarks/bench_serving.py
+
+or via ``python -m benchmarks.run --bench serving [--smoke]`` —
+``--smoke`` shrinks the sweep to T in {1, 4} (CI-sized, writes
+``BENCH_serving_smoke.json``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import gc
+import json
+import time
+
+import numpy as np
+
+from repro.core import protocol
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import make_lasso
+from repro.obs import metrics as obs_metrics
+from repro.runtime.runner import run_on_runtime
+from repro.serve.protocol_engine import ProtocolEngine
+try:
+    from .common import BENCH_SCHEMA_VERSION, emit
+except ImportError:          # direct script run
+    from common import BENCH_SCHEMA_VERSION, emit
+
+TENANTS = (1, 8, 64, 256)
+TENANTS_SMOKE = (1, 4)
+K, BLOCK, ITERS, KEY_BITS = 2, 4, 3, 128   # small per-op payloads: the
+# regime where per-launch overhead dominates and coalescing pays most
+SPEEDUP_FLOOR = 1.2        # asserted at T=64 (and lint-enforced)
+OUT = "BENCH_serving.json"
+OUT_SMOKE = "BENCH_serving_smoke.json"     # never clobber the full artifact
+
+
+def _cfg(seed: int) -> protocol.ProtocolConfig:
+    # scalar-int gold (gold_batch=False): every tenant has its OWN key, so
+    # the per-key batched-CRT compile would swamp the sweep — the rows
+    # path fuses the scalar boxes' enc/dec/(+) regardless, which is the
+    # machinery under test
+    return protocol.ProtocolConfig(
+        K=K, lam=0.05, iters=ITERS, workload="lasso",
+        spec=QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0),
+        cipher="gold", key_bits=KEY_BITS, gold_batch=False, seed=seed)
+
+
+def _solo_ref(A, y, seed: int, cache: dict) -> tuple:
+    """(stats, history) of the solo run for one tenant seed (memoized —
+    the same reference serves both arms and every T that includes it)."""
+    if seed not in cache:
+        r = run_on_runtime(A, y, _cfg(seed))
+        cache[seed] = (r.stats, r.history)
+    return cache[seed]
+
+
+def _run_arm(A, y, n_tenants: int, admission: str, iters: int = ITERS):
+    """One engine arm: returns (engine, results, wall_s)."""
+    eng = ProtocolEngine(admission=admission)
+    for i in range(n_tenants):
+        cfg = _cfg(i) if iters == ITERS \
+            else dataclasses.replace(_cfg(i), iters=iters)
+        eng.admit(A, y, cfg, tid=f"t{i}")
+    # don't let the PREVIOUS arm's discarded runtimes (T scheduler heaps
+    # of ciphertext ints) get collected inside the timed region
+    gc.collect()
+    t0 = time.perf_counter()
+    results = eng.run()
+    wall = time.perf_counter() - t0
+    return eng, results, wall
+
+
+def _bench_tenants(rows, A, y, n_tenants: int, solo_cache: dict,
+                   smoke: bool) -> dict:
+    # untimed warmups for BOTH arms: concurrent compiles the fused-width
+    # traces for this T; the sequential warmup matters too — the first
+    # solo-path pass after a big fused run measures ~2x slower than every
+    # later one (allocator/branch warmup), which would inflate the speedup
+    _run_arm(A, y, n_tenants, "concurrent", iters=1)
+    _run_arm(A, y, n_tenants, "sequential", iters=1)
+
+    eng_s, res_s, wall_s = _run_arm(A, y, n_tenants, "sequential")
+    eng_c, res_c, wall_c = _run_arm(A, y, n_tenants, "concurrent")
+    st_s = eng_s.stats()["serve"]
+    st_c = eng_c.stats()["serve"]
+
+    per_tenant_exact = {}
+    for i in range(n_tenants):
+        ref_stats, ref_hist = _solo_ref(A, y, i, solo_cache)
+        tid = f"t{i}"
+        ok = True
+        for res in (res_s, res_c):
+            ok = ok and obs_metrics.reports_equal_modulo_timing(
+                res[tid].stats, ref_stats)
+            ok = ok and np.array_equal(res[tid].history, ref_hist)
+        per_tenant_exact[tid] = bool(ok)
+    bit_exact = all(per_tenant_exact.values())
+
+    total_rounds = n_tenants * ITERS
+    agg_s = total_rounds / max(wall_s, 1e-9)
+    agg_c = total_rounds / max(wall_c, 1e-9)
+    speedup = agg_c / max(agg_s, 1e-9)
+    all_lat = [lat for p in st_c["per_tenant"].values()
+               for lat in ([] if p["round_latency_s"]["n"] == 0 else [
+                   p["round_latency_s"]["p50"]])]
+    row = {
+        "tenants": n_tenants,
+        "iters": ITERS,
+        "wall_s_sequential": wall_s,
+        "wall_s_coalesced": wall_c,
+        "agg_rounds_per_sec_sequential": agg_s,
+        "agg_rounds_per_sec_coalesced": agg_c,
+        "speedup_vs_sequential": speedup,
+        "virtual_time_sequential": st_s["virtual_time"],
+        "virtual_time_coalesced": st_c["virtual_time"],
+        "launches_sequential": st_s["launches"],
+        "launches_coalesced": st_c["launches"],
+        "fused_launches": st_c["fused_launches"],
+        "fused_ops": st_c["fused_ops"],
+        "round_latency_p50_s": obs_metrics.summary(all_lat),
+        "bit_exact": bit_exact,
+        "per_tenant_bit_exact": per_tenant_exact,
+    }
+    emit(rows, f"serving_T{n_tenants}_sequential", wall_s,
+         f"agg_rps={agg_s:.2f}")
+    emit(rows, f"serving_T{n_tenants}_coalesced", wall_c,
+         f"agg_rps={agg_c:.2f};speedup={speedup:.2f};"
+         f"bit_exact={bit_exact}")
+    if not bit_exact:
+        raise AssertionError(
+            f"T={n_tenants}: tenant isolation violated — some tenant's "
+            f"report/history diverged from its solo reference "
+            f"({per_tenant_exact})")
+    if not smoke and n_tenants == 64 and speedup < SPEEDUP_FLOOR:
+        raise AssertionError(
+            f"T=64 coalescing speedup {speedup:.2f}x below the "
+            f"{SPEEDUP_FLOOR}x floor — cross-tenant fusion stopped paying")
+    return row
+
+
+def run(rows: list, smoke: bool = False) -> None:
+    inst = make_lasso(8, K * BLOCK, sparsity=0.1, noise=0.01, seed=1)
+    A, y = inst.A, inst.y
+    solo_cache: dict = {}
+    sweep = TENANTS_SMOKE if smoke else TENANTS
+    table = [_bench_tenants(rows, A, y, T, solo_cache, smoke)
+             for T in sweep]
+    ref_stats, _ = _solo_ref(A, y, 0, solo_cache)
+    doc = {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "dims": {"K": K, "block": BLOCK, "iters": ITERS,
+                 "key_bits": KEY_BITS, "tenant_counts": list(sweep),
+                 "cipher": "gold", "gold_batch": False},
+        "serving": table,
+        # one embedded solo-reference core so the schema lint validates
+        # the exact report every tenant is being held to
+        "report": ref_stats,
+    }
+    with open(OUT_SMOKE if smoke else OUT, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True, default=float)
+
+
+if __name__ == "__main__":
+    rows: list[str] = ["name,us_per_call,derived"]
+    import sys
+    run(rows, smoke="--smoke" in sys.argv)
+    print("\n".join(rows))

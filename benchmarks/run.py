@@ -38,6 +38,9 @@ BENCHES = [
      "topology x K sweep (K<=128) + batched-gold speedup (beyond-paper)"),
     ("workloads", "bench_workloads",
      "ADMM workload zoo x K sweep through the protocol (beyond-paper)"),
+    ("serving", "bench_serving",
+     "multi-tenant engine: cross-tenant coalescing vs sequential "
+     "(beyond-paper)"),
 ]
 
 
@@ -58,7 +61,8 @@ def main() -> None:
                     help="comma-separated bench keys, e.g. fig5,tab2,topo")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-dims mode for benches that support it "
-                         "(currently: workloads) — CI-sized smoke runs")
+                         "(currently: kernels, workloads, serving) — "
+                         "CI-sized smoke runs")
     ap.add_argument("--list", action="store_true",
                     help="print the registered bench keys and exit")
     args = ap.parse_args()

@@ -120,6 +120,52 @@ def _check_gold_fastpath(doc, path) -> list[str]:
     return errors
 
 
+def _check_serving(doc, path) -> list[str]:
+    """The serving table's own invariants (BENCH_serving).
+
+    * every row must carry ``bit_exact: true`` AND an all-true
+      ``per_tenant_bit_exact`` map — a coalesced run that perturbs any
+      tenant's RunReport core or iterate history is a correctness bug,
+      whatever its throughput;
+    * the T=64 row (when present — smoke artifacts stop at T=4) must
+      show cross-tenant coalescing BEATING sequential admission on
+      aggregate rounds/sec (``speedup_vs_sequential >= 1.2``) — fusion
+      that stops paying means the rows path or the collector regressed.
+    """
+    table = doc.get("serving")
+    if table is None:       # other BENCH_* artifacts don't carry it
+        return []
+    errors = []
+    if not isinstance(table, list) or not table:
+        return [f"{path}: serving section must be a non-empty list"]
+    for i, row in enumerate(table):
+        where = f"{path}: serving[{i}]"
+        for key in ("tenants", "speedup_vs_sequential", "bit_exact",
+                    "per_tenant_bit_exact", "fused_launches"):
+            if key not in row:
+                errors.append(f"{where} missing {key!r}")
+        if errors:
+            continue
+        if row["bit_exact"] is not True:
+            errors.append(f"{where} (T={row['tenants']}): bit_exact is "
+                          f"{row['bit_exact']!r} — tenant isolation must "
+                          "hold bit-for-bit")
+        pt = row["per_tenant_bit_exact"]
+        if not isinstance(pt, dict) or not pt:
+            errors.append(f"{where}: per_tenant_bit_exact must be a "
+                          "non-empty map")
+        elif not all(v is True for v in pt.values()):
+            bad = sorted(t for t, v in pt.items() if v is not True)
+            errors.append(f"{where}: tenants {bad} failed the solo "
+                          "bit-exactness check")
+        if row["tenants"] == 64 and row["speedup_vs_sequential"] < 1.2:
+            errors.append(
+                f"{where}: 64-tenant coalesced aggregate rounds/sec must "
+                f"beat sequential by >= 1.2x "
+                f"(got {row['speedup_vs_sequential']:.3f}x)")
+    return errors
+
+
 def check_bench(path: pathlib.Path) -> list[str]:
     from benchmarks.common import BENCH_SCHEMA_VERSION
     from repro.obs.metrics import validate_report_core
@@ -139,6 +185,7 @@ def check_bench(path: pathlib.Path) -> list[str]:
         errors.extend(validate_report_core(report, f"{path}:{where}"))
     errors.extend(_check_recycled_row(doc, path))
     errors.extend(_check_gold_fastpath(doc, path))
+    errors.extend(_check_serving(doc, path))
     return errors
 
 

@@ -535,3 +535,166 @@ def warmup(bk: BatchKey, shapes: Sequence,
     from ..obs.metrics import record_profile
     record_profile("warmup", **out)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-key "rows" layer (serving): one launch, many tenants' keys.
+#
+# The jit'd paths above are keyed per BatchKey — correct for a solo run,
+# useless for a serving engine fusing ops across tenants with DIFFERENT
+# keys.  These functions lower a whole cluster of same-WIDTH Paillier ops
+# (same exact byte length of n^2 — :func:`rows_sig`) onto the per-row-
+# modulus kernels (``ops.mulmod_rows``/``modexp_rows``), where each row
+# carries its own tenant's modulus as an operand.  Per-tenant keys make
+# the rows independent, so fusing them changes nothing but the launch
+# count.
+#
+# They are PURE: no counter bumps, no rng draws — the coalescer replays
+# the scalar boxes' telemetry and blinding-draw order around them so a
+# fused tenant stays bit-identical (rng stream included) to its solo run.
+# Formulas mirror ``paillier.encrypt_crt``/``decrypt_crt`` exactly; all
+# arithmetic is exact integer math, so results are bit-identical to the
+# scalar gold path regardless of execution route.
+#
+# ``items`` below is always one entry per tenant: ``(key, ...operands)``;
+# returns are per-tenant lists in the same order.
+# ---------------------------------------------------------------------------
+
+
+def rows_sig(key: gold.PaillierKey) -> tuple:
+    """Fusion signature: ops fuse across tenants iff this matches.
+
+    The exact byte length of n^2 (Barrett requires the top radix-256 limb
+    populated, so equal bit-class keys share a width)."""
+    return ("pail", (key.n2.bit_length() + 7) // 8)
+
+
+def _rows_cluster_width(items) -> int:
+    widths = {rows_sig(item[0])[1] for item in items}
+    if len(widths) != 1:
+        raise ValueError(f"mismatched limb widths in one cluster: "
+                         f"{sorted(widths)} (rows_sig must match)")
+    return widths.pop()
+
+
+def _split_sizes(vals: list, sizes: list[int]) -> list[list]:
+    out, i = [], 0
+    for s in sizes:
+        out.append(vals[i:i + s])
+        i += s
+    return out
+
+
+def _exp_bytes(x: int) -> int:
+    return max(1, (int(x).bit_length() + 7) // 8)
+
+
+def enc_rows(items: Sequence) -> list[list[int]]:
+    """Fused encryption: ``items = [(key, ms, rs), ...]``.
+
+    c = (1 + m*n) * r^n mod n^2 per row (g = n+1 form, exactly
+    ``paillier.encrypt_crt``); blinding factors ``rs`` are drawn by the
+    caller in each tenant's own rng order.
+    """
+    L8 = _rows_cluster_width(items)
+    gms, bases, exps, mods, sizes = [], [], [], [], []
+    le8 = max(_exp_bytes(key.n) for key, _, _ in items)
+    for key, ms, rs in items:
+        for m in ms:
+            gms.append((1 + int(m) * key.n) % key.n2)
+        bases.extend(int(r) for r in rs)
+        exps.extend([key.n] * len(ms))
+        mods.extend([key.n2] * len(ms))
+        sizes.append(len(ms))
+    m8, mu8 = ops.rows_modulus(mods, L8)
+    rn = ops.modexp_rows(ops.pack_rows(bases, L8),
+                         ops.pack_rows(exps, le8), m8, mu8)
+    c8 = ops.mulmod_rows(ops.pack_rows(gms, L8), rn, m8, mu8)
+    return _split_sizes(ops.unpack_rows(c8), sizes)
+
+
+def dec_rows(items: Sequence) -> list[list[int]]:
+    """Fused decryption: ``items = [(key, cs), ...]``.
+
+    m = L(c^lam mod n^2) * mu mod n (exactly ``paillier.decrypt_crt``).
+    """
+    L8 = _rows_cluster_width(items)
+    bases, exps, mods, sizes = [], [], [], []
+    le8 = max(_exp_bytes(key.lam) for key, _ in items)
+    for key, cs in items:
+        bases.extend(int(c) for c in cs)
+        exps.extend([key.lam] * len(cs))
+        mods.extend([key.n2] * len(cs))
+        sizes.append(len(cs))
+    m8, mu8 = ops.rows_modulus(mods, L8)
+    x8 = ops.modexp_rows(ops.pack_rows(bases, L8),
+                         ops.pack_rows(exps, le8), m8, mu8)
+    xs = _split_sizes(ops.unpack_rows(x8), sizes)
+    return [[(x - 1) // key.n * key.mu % key.n for x in xi]
+            for (key, _), xi in zip(items, xs)]
+
+
+def add_rows(items: Sequence) -> list[list[int]]:
+    """Fused ⊕: ``items = [(key, c1s, c2s), ...]`` -> (c1*c2) mod n^2."""
+    L8 = _rows_cluster_width(items)
+    a, b, mods, sizes = [], [], [], []
+    for key, c1s, c2s in items:
+        a.extend(int(c) for c in c1s)
+        b.extend(int(c) for c in c2s)
+        mods.extend([key.n2] * len(c1s))
+        sizes.append(len(c1s))
+    m8, mu8 = ops.rows_modulus(mods, L8)
+    out8 = ops.mulmod_rows(ops.pack_rows(a, L8), ops.pack_rows(b, L8),
+                           m8, mu8)
+    return _split_sizes(ops.unpack_rows(out8), sizes)
+
+
+def matvec_rows(items: Sequence) -> list[list[list[int]]]:
+    """Fused homomorphic matvec: ``items = [(key, Ks, cs_list), ...]``.
+
+    Per tenant, ``Ks`` is an (E, M, N) block of NON-NEGATIVE plaintext
+    exponents and ``cs_list`` holds E length-N ciphertext int lists; the
+    result is E lists of M ints: out[e][i] = prod_j cs[e][j]^K[e][i][j]
+    mod n^2.  (M, N) must match across the cluster — it is part of the
+    coalescer's group shape; callers route any negative exponent through
+    the per-tenant path instead.
+    """
+    L8 = _rows_cluster_width(items)
+    bases, exps, mods_red, sizes = [], [], [], []
+    le8 = 1
+    mm = nn = None
+    for key, Ks, cs_list in items:
+        Ks = np.asarray(Ks, dtype=object)
+        e_cnt, m_rows, n_cols = Ks.shape
+        if mm is None:
+            mm, nn = m_rows, n_cols
+        assert (m_rows, n_cols) == (mm, nn), "cluster shape mismatch"
+        for e in range(e_cnt):
+            cs = [int(c) for c in cs_list[e]]
+            assert len(cs) == nn
+            for i in range(m_rows):
+                for j in range(n_cols):
+                    k = int(Ks[e, i, j])
+                    if k < 0:
+                        raise ValueError("matvec_rows requires "
+                                         "non-negative exponents")
+                    bases.append(cs[j])
+                    exps.append(k)
+                    le8 = max(le8, _exp_bytes(k))
+                mods_red.append(key.n2)
+        sizes.append(e_cnt)
+    mods = [m for m in mods_red for _ in range(nn)]
+    m8, mu8 = ops.rows_modulus(mods, L8)
+    pw = ops.modexp_rows(ops.pack_rows(bases, L8),
+                         ops.pack_rows(exps, le8), m8, mu8)
+    m8r, mu8r = ops.rows_modulus(mods_red, L8)
+    out8 = ops.prod_rows(pw.reshape(len(mods_red), nn, L8), m8r, mu8r)
+    flat = ops.unpack_rows(out8)
+    out, i = [], 0
+    for (_, Ks, _), e_cnt in zip(items, sizes):
+        rows = []
+        for _ in range(e_cnt):
+            rows.append(flat[i:i + mm])
+            i += mm
+        out.append(rows)
+    return out

@@ -310,3 +310,155 @@ def modexp_fixed(base16: jax.Array, e: int, pack: ModulusPack,
             (pack.m_int, "pallas", "modexp_fixed", block_b, impl, e),
             body)(base16)
     raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Multi-modulus "rows" ops — per-ROW moduli ride as operands.
+#
+# The serving layer fuses same-shaped Paillier launches ACROSS tenants:
+# every tenant holds a different key, so the per-key jit closures above
+# cannot be shared, but ``cm.barrett2d`` already broadcasts modulus
+# material per row when ``m.shape[0] == B``.  These wrappers expose that
+# directly: operands, exponents, moduli and Barrett mu all arrive as
+# (B, ·) radix-256 limb arrays, and the jits below are keyed ONLY on
+# shapes (via jax.jit's own cache) — one trace per (batch, limb-width)
+# class, shared by every tenant key of that width.
+#
+# Two trace-count bounds (serving batch sizes vary per round):
+#   * batches pad UP to a power of two (>= _ROWS_PAD_MIN), padding rows
+#     repeat row 0 (a valid modulus row) so the ladder stays well-defined;
+#   * exponent widths pad UP to a power of two bytes, zero-extended
+#     (leading zero windows multiply by table[0] == 1 — exact).
+# ---------------------------------------------------------------------------
+
+_ROWS_PAD_MIN = 8
+
+
+def _pow2_at_least(n: int, floor: int = 1) -> int:
+    p = max(floor, 1)
+    while p < n:
+        p *= 2
+    return p
+
+
+def pack_rows(xs, L8: int) -> np.ndarray:
+    """List of ints -> (B, L8) little-endian radix-256 int32 limbs."""
+    out = np.zeros((len(xs), L8), np.int32)
+    for i, x in enumerate(xs):
+        b = int(x).to_bytes(L8, "little")    # OverflowError if too wide
+        out[i] = np.frombuffer(b, dtype=np.uint8)
+    return out
+
+
+def unpack_rows(arr) -> list[int]:
+    """(B, L) radix-256 limb array -> list of Python ints."""
+    a = np.asarray(arr).astype(np.uint8)
+    return [int.from_bytes(row.tobytes(), "little") for row in a]
+
+
+@functools.lru_cache(maxsize=4096)
+def _row_modulus_bytes(m: int, L8: int) -> tuple[bytes, bytes]:
+    if (m >> (8 * (L8 - 1))) == 0:
+        raise ValueError(
+            f"modulus does not fill {L8} radix-256 limbs (Barrett needs "
+            "the top limb populated); cluster by exact byte length")
+    mu = (1 << (16 * L8)) // m
+    return m.to_bytes(L8, "little"), mu.to_bytes(L8 + 1, "little")
+
+
+def rows_modulus(ms, L8: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row Barrett material: (B, L8) moduli + (B, L8+1) mu limbs.
+
+    Every modulus must have EXACT byte length ``L8`` — same-width
+    clustering is the caller's (the coalescer's) fusion invariant.
+    """
+    m8 = np.zeros((len(ms), L8), np.int32)
+    mu8 = np.zeros((len(ms), L8 + 1), np.int32)
+    for i, m in enumerate(ms):
+        mb, mub = _row_modulus_bytes(int(m), L8)
+        m8[i] = np.frombuffer(mb, dtype=np.uint8)
+        mu8[i] = np.frombuffer(mub, dtype=np.uint8)
+    return m8, mu8
+
+
+def _pad_rows(rows_arrays: list, bsz: int) -> tuple[list, int]:
+    """Pad each (B, ·) array to the next power-of-two batch by repeating
+    its row 0 (a valid modulus/operand row — padded results are exact
+    garbage, sliced off by the caller)."""
+    padded_b = _pow2_at_least(bsz, _ROWS_PAD_MIN)
+    if padded_b == bsz:
+        return rows_arrays, bsz
+    out = []
+    for a in rows_arrays:
+        pad = np.broadcast_to(a[0:1], (padded_b - bsz,) + a.shape[1:])
+        out.append(np.concatenate([a, pad], axis=0))
+    return out, bsz
+
+
+@jax.jit
+def _mulmod_rows8(a8, b8, m8, mu8):
+    return cm.mulmod2d(a8, b8, m8, mu8)
+
+
+_MODEXP_ROWS8 = {
+    "binary": jax.jit(cm.modexp2d),
+    "win4": jax.jit(cm.modexp2d_win4),
+}
+
+
+def mulmod_rows(a, b, m8, mu8) -> np.ndarray:
+    """(a*b) mod m, row-wise, per-row moduli; all args (B, ·) int32."""
+    (a, b, m8, mu8), bsz = _pad_rows([np.asarray(a), np.asarray(b),
+                                      np.asarray(m8), np.asarray(mu8)],
+                                     a.shape[0])
+    return np.asarray(_mulmod_rows8(a, b, m8, mu8))[:bsz]
+
+
+def modexp_rows(base, exp, m8, mu8, method: str | None = None) -> np.ndarray:
+    """base^exp mod m, row-wise, per-row moduli AND exponents.
+
+    ``exp`` is (B, Le8) radix-256; Le8 pads to a power of two bytes so
+    the ladder trace is shared across nearby exponent widths (radix-8
+    widths always satisfy win4's bits%4==0 requirement).
+    """
+    method = method or MODEXP_METHOD
+    if method not in _MODEXP_ROWS8:
+        raise ValueError(f"unknown modexp method {method!r}; expected one "
+                         f"of {tuple(_MODEXP_ROWS8)}")
+    exp = np.asarray(exp)
+    le8 = _pow2_at_least(exp.shape[1])
+    if le8 != exp.shape[1]:
+        exp = np.pad(exp, ((0, 0), (0, le8 - exp.shape[1])))
+    (base, exp, m8, mu8), bsz = _pad_rows(
+        [np.asarray(base), exp, np.asarray(m8), np.asarray(mu8)],
+        base.shape[0])
+    return np.asarray(_MODEXP_ROWS8[method](base, exp, m8, mu8))[:bsz]
+
+
+@jax.jit
+def _prod_rows8(x, m8, mu8):
+    # x (R, N, L): reduce prod over axis 1 mod the per-row modulus, by
+    # log-depth pairwise halving (exact ring product — order-free).
+    n = x.shape[1]
+    while n > 1:
+        h = n // 2
+        rr, _, ll = x.shape
+        a = x[:, :h].reshape(rr * h, ll)
+        b = x[:, h:2 * h].reshape(rr * h, ll)
+        mm = jnp.repeat(m8, h, axis=0)
+        mmu = jnp.repeat(mu8, h, axis=0)
+        prod = cm.mulmod2d(a, b, mm, mmu).reshape(rr, h, ll)
+        if n % 2:
+            x = jnp.concatenate([prod, x[:, n - 1:n]], axis=1)
+            n = h + 1
+        else:
+            x = prod
+            n = h
+    return x[:, 0]
+
+
+def prod_rows(x, m8, mu8) -> np.ndarray:
+    """Row-wise modular product over axis 1: (R, N, L8) -> (R, L8)."""
+    (x, m8, mu8), rsz = _pad_rows(
+        [np.asarray(x), np.asarray(m8), np.asarray(mu8)], x.shape[0])
+    return np.asarray(_prod_rows8(x, m8, mu8))[:rsz]

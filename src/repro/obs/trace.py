@@ -31,7 +31,7 @@ from typing import Iterable
 
 #: the closed set of span categories; chrome_trace gives each its own lane
 CATEGORIES = ("phase", "crypto_op", "launch", "message", "dispatch",
-              "reshare", "agg", "churn", "alert")
+              "reshare", "agg", "churn", "alert", "serve")
 
 
 @dataclasses.dataclass

@@ -256,6 +256,86 @@ def lookup(table: dict, backend: str, key_bits: int, batch: int,
 
 
 # ---------------------------------------------------------------------------
+# Serving admission knee cache
+# ---------------------------------------------------------------------------
+# The multi-tenant engine (repro.serve.protocol_engine) tunes how many
+# tenants to admit concurrently — the knee of the aggregate rounds/sec
+# curve — and persists the result here so later ``admission="auto"`` runs
+# skip the sweep.  Entries share the dispatch cache file under the
+# backend name "serve" (``cpu/serve/<key_bits>/<nk>``): :func:`lookup`
+# filters on backend before parsing, and :func:`calibrate`'s
+# load-validation only requires dict values, so the two families coexist.
+
+def _serve_key(key_bits: int, nk: int, device: str | None = None) -> str:
+    return _entry_key("serve", key_bits, nk, device=device)
+
+
+def save_serve_knee(key_bits: int, nk: int, window: int,
+                    curve: dict | None = None,
+                    path: str | None = None) -> None:
+    """Persist the tuned admission window for ``(device, key_bits, nk)``.
+
+    ``curve`` optionally records the measured width -> rounds/sec sweep
+    for later inspection.  Write is atomic (tmp + rename), merging into
+    whatever calibration entries already live in the file; a corrupt
+    existing file is replaced rather than crashing.
+    """
+    path = path or cache_path()
+    table: dict = {"version": TABLE_VERSION, "entries": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            loaded = None
+        if (isinstance(loaded, dict)
+                and loaded.get("version") == TABLE_VERSION
+                and isinstance(loaded.get("entries"), dict)
+                and all(isinstance(v, dict)
+                        for v in loaded["entries"].values())):
+            table = loaded
+    entry: dict = {"window": int(window)}
+    if curve is not None:
+        entry["rounds_per_sec"] = {str(k): float(v)
+                                   for k, v in curve.items()}
+    table["entries"][_serve_key(key_bits, nk)] = entry
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(table, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_serve_knee(key_bits: int, nk: int,
+                    path: str | None = None) -> int | None:
+    """Tuned admission window for ``(device, key_bits, nk)``, or ``None``.
+
+    ``None`` on any defect — missing file, unreadable JSON, version skew,
+    absent entry, non-dict entry, missing/non-positive/ill-typed window —
+    so callers can always fall back to sequential admission without
+    try/except.
+    """
+    path = path or cache_path()
+    try:
+        with open(path) as f:
+            loaded = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if not (isinstance(loaded, dict)
+            and loaded.get("version") == TABLE_VERSION
+            and isinstance(loaded.get("entries"), dict)):
+        return None
+    entry = loaded["entries"].get(_serve_key(key_bits, nk))
+    if not isinstance(entry, dict):
+        return None
+    window = entry.get("window")
+    if not isinstance(window, int) or isinstance(window, bool) \
+            or window < 1:
+        return None
+    return window
+
+
+# ---------------------------------------------------------------------------
 # Virtual-clock cost model
 # ---------------------------------------------------------------------------
 

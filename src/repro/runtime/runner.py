@@ -198,6 +198,11 @@ class MasterActor:
         self.iter_times: list[float] = []
         self.t = -1
         self.done = False
+        # serving hooks: the engine chains admissions on completion and
+        # may cut a tenant short after a given number of completed rounds
+        self.on_done: "Callable | None" = None
+        self.cancel_after: int | None = None
+        self.cancelled = False
         # churn + recycled-update state (mirrors run_protocol's frame)
         self.churn = cfg.churn
         self.active = set(range(K))
@@ -217,6 +222,8 @@ class MasterActor:
         self._phase_t0 = rt.sched.now
         if cfg.iters == 0:
             self.done = True
+            if self.on_done is not None:
+                self.on_done()
             return
         for k in range(cfg.K):
             if cfg.collaborative and rt.key is not None:
@@ -568,13 +575,20 @@ class MasterActor:
         if rt.tracer.enabled:
             rt.tracer.add(f"round:{self.t}", "phase", t=self.iter_start,
                           dur=rt.sched.now - self.iter_start, round=self.t)
-        if self.t + 1 < cfg.iters:
-            self._iterate(self.t + 1)
+        nxt = self.t + 1
+        cut = cfg.iters
+        if self.cancel_after is not None:
+            cut = min(cfg.iters, max(1, self.cancel_after))
+        if nxt < cut:
+            self._iterate(nxt)
         else:
             self.done = True
+            self.cancelled = nxt < cfg.iters
             if rt.tracer.enabled:
                 rt.tracer.add("phase:iterate", "phase", t=self._phase_t0,
                               dur=rt.sched.now - self._phase_t0)
+            if self.on_done is not None:
+                self.on_done()
 
 
 class _Runtime:
@@ -626,31 +640,36 @@ def auto_hold_ticks(topo: Topology, transport: Transport, tick_s: float,
     return int(min(cap, math.ceil((p95 - p50) / tick_s)))
 
 
-def run_on_runtime(A: np.ndarray, y: np.ndarray,
-                   cfg: "protocol.ProtocolConfig", *,
-                   workload=None,
-                   topology: Topology | None = None,
-                   link: LinkModel | None = None,
-                   per_link: dict | None = None,
-                   mode: str | None = None,
-                   tick_s: float = 1e-4,
-                   cost_model: dispatch.CostModel | None = None,
-                   stale_limit: int = 4,
-                   fail_detect: int = 3,
-                   table: dict | None = None,
-                   calib_path: str | None = None,
-                   coalesce_hold_ticks: "int | str" = 0,
-                   trace: "bool | trace_mod.Tracer" = False,
-                   health: "bool | health_mod.HealthMonitor" = False,
-                   ) -> "protocol.ProtocolResult":
-    """Run 3P-ADMM-PC2 on the simulated edge network; see module docstring.
+def build_runtime(A: np.ndarray, y: np.ndarray,
+                  cfg: "protocol.ProtocolConfig", *,
+                  workload=None,
+                  topology: Topology | None = None,
+                  link: LinkModel | None = None,
+                  per_link: dict | None = None,
+                  mode: str | None = None,
+                  tick_s: float = 1e-4,
+                  cost_model: dispatch.CostModel | None = None,
+                  stale_limit: int = 4,
+                  fail_detect: int = 3,
+                  table: dict | None = None,
+                  calib_path: str | None = None,
+                  coalesce_hold_ticks: "int | str" = 0,
+                  trace: "bool | trace_mod.Tracer" = False,
+                  health: "bool | health_mod.HealthMonitor" = False,
+                  sched: "Scheduler | None" = None,
+                  make_queue=None,
+                  ):
+    """Construct the fully wired runtime WITHOUT running it.
 
-    Returns a ``ProtocolResult`` whose ``stats`` is a schema-versioned
-    :func:`repro.obs.metrics.build_run_report` RunReport: the usual
-    op/traffic counters plus a ``"runtime"`` section (virtual clock,
-    per-iteration completion times, per-link bytes, coalescing/dispatch
-    telemetry, limb-op roofline).  In sync mode the report's core
-    sections are identical to ``run_protocol``'s (conformance-tested).
+    Factored out of :func:`run_on_runtime` so a serving engine
+    (``repro.serve.protocol_engine``) can admit many protocol instances
+    onto ONE shared virtual clock: pass ``sched`` to reuse a scheduler
+    across tenants, and ``make_queue`` (a ``CoalesceQueue``-compatible
+    factory with the same positional/keyword signature) to route this
+    tenant's crypto ops through a shared cross-tenant collector.
+    Returns ``(rt, master, wl, mode)`` — call ``master.start()`` and
+    ``rt.sched.run()`` yourself, then hand the quadruple to
+    :func:`collect_result` for the RunReport/ledger tail.
 
     ``trace`` may be ``True`` (allocate a fresh span tracer) or a
     :class:`repro.obs.trace.Tracer` to fill — spans cover phases, rounds,
@@ -716,16 +735,16 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         raise ValueError(f"topology has {topo.n_edges} edges, cfg.K={K}")
     tracer = trace_mod.as_tracer(trace)
     monitor = health_mod.as_monitor(health)
-    sched = Scheduler(seed=cfg.seed)
+    sched = sched if sched is not None else Scheduler(seed=cfg.seed)
     if monitor.enabled:
         monitor.bind(tracer, clock=lambda: sched.now)
     transport = Transport(sched, topo, default=link, per_link=per_link,
                           tracer=tracer)
     if coalesce_hold_ticks == "auto":
         coalesce_hold_ticks = auto_hold_ticks(topo, transport, tick_s)
-    cq = CoalesceQueue(sched, box, counter=counter, tick_s=tick_s,
-                       hold_ticks=coalesce_hold_ticks, tracer=tracer,
-                       monitor=monitor)
+    cq = (make_queue or CoalesceQueue)(
+        sched, box, counter=counter, tick_s=tick_s,
+        hold_ticks=coalesce_hold_ticks, tracer=tracer, monitor=monitor)
     if isinstance(box, dispatch.AdaptiveBox):
         box.tracer = tracer
         box.clock = lambda: sched.now
@@ -743,14 +762,73 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         transport.bind(ea.name, ea.on_message)
     # relays are pure forwarding hops: Transport prices them per hop and
     # never delivers to them, so they need no actor.
+    return rt, master, wl, mode
 
+
+def run_on_runtime(A: np.ndarray, y: np.ndarray,
+                   cfg: "protocol.ProtocolConfig", *,
+                   workload=None,
+                   topology: Topology | None = None,
+                   link: LinkModel | None = None,
+                   per_link: dict | None = None,
+                   mode: str | None = None,
+                   tick_s: float = 1e-4,
+                   cost_model: dispatch.CostModel | None = None,
+                   stale_limit: int = 4,
+                   fail_detect: int = 3,
+                   table: dict | None = None,
+                   calib_path: str | None = None,
+                   coalesce_hold_ticks: "int | str" = 0,
+                   trace: "bool | trace_mod.Tracer" = False,
+                   health: "bool | health_mod.HealthMonitor" = False,
+                   ) -> "protocol.ProtocolResult":
+    """Run 3P-ADMM-PC2 on the simulated edge network; see module docstring.
+
+    Returns a ``ProtocolResult`` whose ``stats`` is a schema-versioned
+    :func:`repro.obs.metrics.build_run_report` RunReport: the usual
+    op/traffic counters plus a ``"runtime"`` section (virtual clock,
+    per-iteration completion times, per-link bytes, coalescing/dispatch
+    telemetry, limb-op roofline).  In sync mode the report's core
+    sections are identical to ``run_protocol``'s (conformance-tested).
+
+    All keyword knobs are documented on :func:`build_runtime`, which this
+    function composes with :func:`collect_result` — the split exists so
+    the multi-tenant serving engine can drive many runtimes on one clock.
+    """
+    rt, master, wl, mode = build_runtime(
+        A, y, cfg, workload=workload, topology=topology, link=link,
+        per_link=per_link, mode=mode, tick_s=tick_s, cost_model=cost_model,
+        stale_limit=stale_limit, fail_detect=fail_detect, table=table,
+        calib_path=calib_path, coalesce_hold_ticks=coalesce_hold_ticks,
+        trace=trace, health=health)
     master.start()
-    sched.run()
+    rt.sched.run()
     if not master.done:
         raise RuntimeError(
-            f"runtime drained at t={sched.now:.4f}s before the protocol "
-            f"finished (iteration {master.t}/{cfg.iters})")
+            f"runtime drained at t={rt.sched.now:.4f}s before the protocol "
+            f"finished (iteration {master.t}/{rt.cfg.iters})")
+    return collect_result(rt, master, wl, mode)
 
+
+def collect_result(rt, master, wl, mode, *, driver: str = "runtime",
+                   history: np.ndarray | None = None,
+                   ledger_extra: dict | None = None,
+                   extra_runtime: dict | None = None,
+                   ) -> "protocol.ProtocolResult":
+    """Assemble the RunReport + ledger record for a finished runtime.
+
+    The tail half of :func:`run_on_runtime`.  ``history`` overrides the
+    rows fed to the MSE trajectory (the serving engine truncates it for
+    tenants cancelled mid-run), ``ledger_extra`` rides into the ledger
+    record, and ``extra_runtime`` is merged into the report's
+    ``"runtime"`` telemetry section.
+    """
+    sched, transport, cq, counter = rt.sched, rt.transport, rt.cq, rt.counter
+    box, key, cfg, tracer, monitor = rt.box, rt.key, rt.cfg, rt.tracer, \
+        rt.monitor
+    topo = transport.topo
+    if history is None:
+        history = master.history
     traffic = dict(transport.traffic)
     if master.agg_ctx is not None:
         traffic["edge->master"] = traffic.get("edge->master", 0) \
@@ -792,15 +870,17 @@ def run_on_runtime(A: np.ndarray, y: np.ndarray,
         runtime["trace"] = tracer.signature()
     if monitor.enabled:
         runtime["health"] = monitor.health_section()
+    if extra_runtime:
+        runtime.update(extra_runtime)
     stats = obs_metrics.build_run_report(
-        driver="runtime", ops=ops, traffic=traffic, key_bits=key_bits,
+        driver=driver, ops=ops, traffic=traffic, key_bits=key_bits,
         cipher=cfg.cipher, workload=wl.name,
-        reshare_events=master.reshare_events, history=master.history,
+        reshare_events=master.reshare_events, history=history,
         churn={**master.churn_counts, "recycled": master.recycled},
         runtime=runtime)
     # run-history ledger: one compact record per completed run (no-op
     # when REPRO_LEDGER is off; never raises)
-    ledger_mod.record_run(stats, cfg=cfg, mode=mode)
+    ledger_mod.record_run(stats, cfg=cfg, mode=mode, extra=ledger_extra)
     return protocol.ProtocolResult(
-        x=master.wst.x_prev, history=master.history, stats=stats,
+        x=master.wst.x_prev, history=history, stats=stats,
         stale_events=master.stale_events)

@@ -1,1 +1,8 @@
-"""Serving substrate: batched prefill/decode engine with KV-cache reuse."""
+"""Serving substrate.
+
+* ``engine`` — batched prefill/decode engine with KV-cache reuse (seed
+  model-serving scaffolding).
+* ``protocol_engine`` — the multi-tenant 3P-ADMM-PC2 protocol serving
+  engine: many concurrent protocol instances on one shared virtual
+  clock with cross-tenant crypto-launch coalescing (docs/serving.md).
+"""

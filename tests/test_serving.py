@@ -1,0 +1,486 @@
+"""Tenant-isolation conformance for the multi-tenant serving engine.
+
+The headline invariant of ``repro.serve.protocol_engine``: putting a
+protocol instance inside a shared-clock engine — where its Paillier
+launches FUSE with other tenants' through the cross-tenant rows path —
+must change NOTHING about what that tenant computes or observes.  The
+matrix runs every registered workload family under the gold-batched,
+vec, and adaptive cipher arms inside mixed 8-tenant engines and holds
+each tenant to its solo ``run_on_runtime`` reference:
+
+* RunReport core sections byte-identical (``diff_reports`` clean);
+* per-iteration history bit-identical;
+* the blinding rng consumed the exact same stream (post-run state
+  parity), so solo and served runs stay interchangeable mid-protocol.
+
+Property tests (via the ``_hypothesis_compat`` shim) fuzz random tenant
+mixes — heterogeneous key sizes, staggered admission, mid-run
+cancellation — and pin the structural guarantees: mismatched limb
+widths NEVER fuse into one cluster, every fused result demuxes to the
+tenant that submitted it, and fusing can only SAVE launches.  Churn
+rides along: a quarter-schedule tenant keeps its churn telemetry and
+recycled-update savings bit-identical to solo, and a tenant finishing
+early (cancelled or short) must not perturb any surviving tenant's span
+stream.  The admission tuner's knee detection, calibration-cache
+round-trip, and corrupt-cache sequential fallback close the file.
+"""
+import dataclasses
+import functools
+import json
+import random
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro import workloads
+from repro.core import paillier as gold
+from repro.core import paillier_batch as pb
+from repro.core import protocol
+from repro.core.churn import ChurnSchedule
+from repro.core.quantization import QuantSpec
+from repro.data.synthetic import make_lasso
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as trace_mod
+from repro.runtime import coalesce, dispatch
+from repro.runtime.runner import build_runtime, collect_result, \
+    run_on_runtime
+from repro.runtime.scheduler import Scheduler
+from repro.serve import protocol_engine as pe
+from repro.serve.protocol_engine import ProtocolEngine
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+SPEC = QuantSpec(delta=1e6, zmin=-8.0, zmax=8.0)
+K, N, ITERS, KEY_BITS = 4, 32, 3, 128    # Nk = 8 == pb.BATCH_MIN
+WORKLOADS = ("lasso", "ridge", "logistic", "elastic_net", "power_grid",
+             "consensus_lasso", "consensus_logistic", "streaming_lasso")
+ROW_SPLIT = {"consensus_lasso", "consensus_logistic"}
+# adaptive runs price routing off a synthetic table (legacy device-
+# wildcard keys), exactly as tests/test_conformance.py does
+SYNTH_TABLE = {"version": 1, "entries": {
+    f"gold/{KEY_BITS}/8": {"enc": 1e-6, "dec": 1e-6, "add": 1e-3,
+                           "matvec": 1e-3, "convert": 1e-8},
+    f"vec/{KEY_BITS}/8": {"enc": 1e-3, "dec": 1e-3, "add": 1e-6,
+                          "matvec": 1e-6, "convert": 1e-8},
+}}
+ARMS = {
+    "gold": dict(cipher="gold", gold_batch=True),
+    "vec": dict(cipher="vec"),
+    "adaptive": dict(cipher="auto"),
+}
+
+
+def _cfg(**kw):
+    base = dict(K=K, lam=0.05, iters=ITERS, spec=SPEC, seed=0,
+                key_bits=KEY_BITS)
+    base.update(kw)
+    return protocol.ProtocolConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def inst():
+    return make_lasso(24, N, sparsity=0.1, noise=0.01, seed=1)
+
+
+def _workload_case(name, lasso_inst):
+    """(workload, instance, spec, cfg overrides) — same grid as
+    tests/test_conformance.py: every family's encrypted block is nk=8."""
+    if name == "lasso":
+        return None, lasso_inst, SPEC, {}
+    wl = workloads.get_default(name)
+    n = N // K if name in ROW_SPLIT else N
+    winst = wl.make_instance(24, n, K, seed=1)
+    spec = wl.calibrate_spec(winst.A, winst.y, K, ITERS)
+    return wl, winst, spec, {"rho": wl.rho, "lam": wl.lam}
+
+
+def _solo_run(A, y, cfg, wl=None, table=None):
+    """Solo reference via the same build/collect split the engine uses,
+    keeping the runtime handle so tests can inspect the box rng."""
+    rt, master, w, mode = build_runtime(A, y, cfg, workload=wl, table=table)
+    master.start()
+    rt.sched.run()
+    assert master.done
+    return collect_result(rt, master, w, mode), rt
+
+
+def _box_rng(rt):
+    box = rt.box
+    return box.gold.rng if isinstance(box, dispatch.AdaptiveBox) \
+        else box.rng
+
+
+# ---------------------------------------------------------------------------
+# the conformance matrix: 8 families x {gold, vec, adaptive}, each arm a
+# mixed 8-tenant engine held to per-family solo references
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=sorted(ARMS))
+def served(request, inst):
+    arm = request.param
+    arm_kw = ARMS[arm]
+    table = SYNTH_TABLE if arm == "adaptive" else None
+    cases = {name: _workload_case(name, inst) for name in WORKLOADS}
+
+    def case_cfg(name):
+        wl, winst, spec, over = cases[name]
+        return dataclasses.replace(_cfg(**arm_kw), workload=name,
+                                   spec=spec, **over)
+
+    solo = {}
+    for name in WORKLOADS:
+        wl, winst, _, _ = cases[name]
+        solo[name] = _solo_run(winst.A, winst.y, case_cfg(name),
+                               wl=wl, table=table)
+
+    eng = ProtocolEngine(admission="concurrent")
+    for name in WORKLOADS:
+        wl, winst, _, _ = cases[name]
+        eng.admit(winst.A, winst.y, case_cfg(name), tid=name,
+                  workload=wl, table=table)
+    results = eng.run()
+    return {"arm": arm, "engine": eng, "results": results, "solo": solo}
+
+
+def test_reports_bit_identical_to_solo(served):
+    """Every tenant's RunReport core equals its solo reference byte for
+    byte (modulo timing-only runtime telemetry), in a mixed engine where
+    other tenants' ops share its launches."""
+    for name in WORKLOADS:
+        solo_res, _ = served["solo"][name]
+        got = served["results"][name].stats
+        assert obs_metrics.reports_equal_modulo_timing(got, solo_res.stats), \
+            (served["arm"], name,
+             obs_metrics.diff_reports(got, solo_res.stats))
+        assert obs_metrics.validate_report_core(got) == []
+
+
+def test_histories_bit_identical_to_solo(served):
+    for name in WORKLOADS:
+        solo_res, _ = served["solo"][name]
+        assert np.array_equal(served["results"][name].history,
+                              solo_res.history), (served["arm"], name)
+
+
+def test_rng_consumption_identical_to_solo(served):
+    """Fused launches replay each tenant's blinding draws from ITS OWN
+    rng in submission order — the post-run stream position matches solo
+    exactly."""
+    for name in WORKLOADS:
+        _, solo_rt = served["solo"][name]
+        served_rt = served["engine"].tenants[name].rt
+        assert _box_rng(served_rt).getstate() == \
+            _box_rng(solo_rt).getstate(), (served["arm"], name)
+
+
+def test_gold_arm_actually_fused(served):
+    """The gold engine fused cross-tenant work (the matrix must not pass
+    vacuously); vec/adaptive boxes ride the collector's solo path."""
+    st_ = served["engine"].stats()["serve"]
+    if served["arm"] == "gold":
+        assert st_["fused_launches"] > 0
+        assert st_["fused_ops"] > 0
+    assert st_["tenants"] == len(WORKLOADS)
+    for name in WORKLOADS:
+        lat = st_["per_tenant"][name]["round_latency_s"]
+        assert lat["n"] == ITERS and "p50" in lat and "p95" in lat
+
+
+# ---------------------------------------------------------------------------
+# property tests: heterogeneous key sizes at the queue level
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _pool_key(bits: int) -> gold.PaillierKey:
+    return gold.keygen(bits, random.Random(bits))
+
+
+KEY_SIZES = (256, 512, 1024)
+
+
+@given(st.data())
+def test_mixed_key_sizes_fuse_safely(data):
+    """Random tenant mixes over 256/512/1024-bit keys submitting ⊕ work:
+    clusters never mix limb widths, every result demuxes to the right
+    tenant's values, and the collector launches at most as often as the
+    tenants would solo."""
+    n_tenants = data.draw(st.integers(2, 4))
+    specs = [(data.draw(st.sampled_from(KEY_SIZES)),
+              data.draw(st.integers(2, 6)))
+             for _ in range(n_tenants)]
+    sched = Scheduler(seed=0)
+    col = coalesce.CrossTenantCoalescer(sched)
+    got: dict[int, list] = {}
+    want: dict[int, list] = {}
+    for i, (bits, n_ops) in enumerate(specs):
+        key = _pool_key(bits)
+        box = protocol.GoldBox(key, random.Random(i), batch=False,
+                               counter=protocol.OpCounter())
+        tq = coalesce.TenantQueue(sched, box, counter=box.counter,
+                                  tenant=f"t{i}", collector=col)
+        c1 = [gold.encrypt_crt(key, 10 + j, gold.rand_r(key, box.rng))
+              for j in range(n_ops)]
+        c2 = [gold.encrypt_crt(key, 20 + j, gold.rand_r(key, box.rng))
+              for j in range(n_ops)]
+        want[i] = [(a * b) % key.n2 for a, b in zip(c1, c2)]
+        tq.submit("add", (c1, c2), functools.partial(
+            lambda i, out: got.__setitem__(i, list(out)), i))
+    sched.run()
+    for i, (bits, _) in enumerate(specs):
+        assert [int(x) for x in got[i]] == want[i], f"t{i} got wrong demux"
+    # width safety: every fused cluster logged ONE limb width shared by
+    # every rider (mismatched n^2 byte lengths must never co-launch)
+    width_of = {f"t{i}": pb.rows_sig(_pool_key(b))[1]
+                for i, (b, _) in enumerate(specs)}
+    for entry in col.fused_log:
+        assert {width_of[t] for t in entry["tenants"]} \
+            == {entry["limb_bytes"]}, entry
+    # fusing can only save launches: one per (op, width, op-count) solo
+    solo_launches = len({(i, b, n) for i, (b, n) in enumerate(specs)})
+    assert col.total_launches <= solo_launches
+    assert col.fused_launches <= col.total_launches
+
+
+# ---------------------------------------------------------------------------
+# property tests: staggered admission + mid-run cancellation (engine level)
+# ---------------------------------------------------------------------------
+
+_PLAIN_SOLO_CACHE: dict = {}
+
+
+def _plain_solo(A, y, seed: int, iters: int):
+    k = (seed, iters)
+    if k not in _PLAIN_SOLO_CACHE:
+        _PLAIN_SOLO_CACHE[k] = run_on_runtime(
+            A, y, _cfg(cipher="plain", K=2, seed=seed, iters=iters))
+    return _PLAIN_SOLO_CACHE[k]
+
+
+@functools.lru_cache(maxsize=1)
+def _stagger_inst():
+    # the shim's @given hides the wrapper signature from pytest, so this
+    # property builds its instance itself instead of using the fixture
+    return make_lasso(24, N, sparsity=0.1, noise=0.01, seed=1)
+
+
+@given(st.data())
+def test_staggered_admission_and_completion(data):
+    """Tenants admitted at random offsets, some cancelled mid-run: each
+    one's report equals a solo run of exactly the rounds it completed."""
+    inst = _stagger_inst()
+    A, y = inst.A[:, :16], inst.y
+    n_tenants = data.draw(st.integers(2, 4))
+    plan = []
+    for i in range(n_tenants):
+        iters = data.draw(st.integers(1, 3))
+        cancel = data.draw(st.sampled_from((0, 1)))
+        cancel_after = data.draw(st.integers(1, iters)) if cancel else None
+        admit_at = data.draw(st.floats(0.0, 0.02))
+        plan.append((i, iters, cancel_after, admit_at))
+    eng = ProtocolEngine(admission="concurrent")
+    for i, iters, cancel_after, admit_at in plan:
+        eng.admit(A, y, _cfg(cipher="plain", K=2, seed=i, iters=iters),
+                  tid=f"t{i}", admit_at=admit_at,
+                  cancel_after=cancel_after)
+    results = eng.run()
+    per_tenant = eng.stats()["serve"]["per_tenant"]
+    for i, iters, cancel_after, _ in plan:
+        effective = iters if cancel_after is None \
+            else min(iters, cancel_after)
+        ref = _plain_solo(A, y, i, effective)
+        got = results[f"t{i}"]
+        assert obs_metrics.reports_equal_modulo_timing(
+            got.stats, ref.stats), \
+            (i, obs_metrics.diff_reports(got.stats, ref.stats))
+        assert np.array_equal(got.history, ref.history)
+        assert per_tenant[f"t{i}"]["rounds"] == effective
+        assert per_tenant[f"t{i}"]["cancelled"] == (effective < iters)
+
+
+# ---------------------------------------------------------------------------
+# churn under serving
+# ---------------------------------------------------------------------------
+
+CHURN_ITERS = 5
+CHURN = ChurnSchedule.quarter(K, CHURN_ITERS)
+
+
+@pytest.mark.parametrize("arm_kw", [
+    dict(cipher="plain", recycle=True),
+    dict(cipher="gold", gold_batch=False, recycle=True),
+], ids=["plain_recycle", "gold_recycle"])
+def test_churn_tenant_matches_solo(inst, arm_kw):
+    """A quarter-schedule churn tenant served next to a churn-free one
+    keeps its leave/rejoin telemetry AND its recycled-update savings
+    bit-identical to solo."""
+    cfg_churn = _cfg(iters=CHURN_ITERS, churn=CHURN, **arm_kw)
+    solo = run_on_runtime(inst.A, inst.y, cfg_churn)
+    eng = ProtocolEngine(admission="concurrent")
+    eng.admit(inst.A, inst.y, cfg_churn, tid="churny")
+    eng.admit(inst.A, inst.y, _cfg(cipher=arm_kw["cipher"],
+                                   gold_batch=False, seed=1), tid="steady")
+    res = eng.run()
+    got = res["churny"].stats
+    assert obs_metrics.reports_equal_modulo_timing(got, solo.stats), \
+        obs_metrics.diff_reports(got, solo.stats)
+    assert got["churn"]["leaves"] == got["churn"]["rejoins"] == 1
+    # lasso stalls after the rejoin, so tolerance-0 recycling saves real
+    # crypto work — and saves exactly as much inside the engine
+    assert got["churn"]["recycled"] == solo.stats["churn"]["recycled"] > 0
+    assert np.array_equal(res["churny"].history, solo.history)
+
+
+def test_finished_tenant_does_not_perturb_survivors(inst):
+    """Determinism pin on the shared clock: tenant A's span stream is
+    identical whether its neighbor B was cancelled after round 1 or
+    simply configured with iters=1 — a tenant leaving the engine frees
+    queue slots without touching anyone else's schedule."""
+    A_, y_ = inst.A, inst.y
+
+    def run_pair(b_iters, b_cancel):
+        tr = trace_mod.Tracer()
+        eng = ProtocolEngine(admission="concurrent")
+        eng.admit(A_, y_, _cfg(cipher="gold", gold_batch=False),
+                  tid="a", trace=tr)
+        eng.admit(A_, y_, _cfg(cipher="gold", gold_batch=False, seed=1,
+                               iters=b_iters),
+                  tid="b", cancel_after=b_cancel)
+        eng.run()
+        return tr.signature()
+
+    assert run_pair(ITERS, 1) == run_pair(1, None)
+
+
+# ---------------------------------------------------------------------------
+# admission tuner: knee detection + calibration cache
+# ---------------------------------------------------------------------------
+
+def test_knee_monotone_plateau_cliff():
+    assert pe.knee([1, 2, 4, 8], [1.0, 2.0, 4.0, 8.0]) == 8
+    assert pe.knee([1, 2, 4, 8], [1.0, 2.0, 2.1, 2.15]) == 2
+    assert pe.knee([1, 2, 4], [1.0, 2.0, 0.5]) == 2
+    assert pe.knee([4], [3.0]) == 4
+    with pytest.raises(ValueError):
+        pe.knee([], [])
+
+
+def test_autotune_stops_past_the_knee():
+    calls = []
+    tput = {1: 1.0, 2: 2.0, 4: 2.05, 8: 100.0}
+
+    def measure(w):
+        calls.append(w)
+        return tput[w]
+
+    w, curve = pe.autotune(measure, (1, 2, 4, 8))
+    assert w == 2
+    assert calls == [1, 2, 4]        # 8 never measured: 4 already flat
+    assert curve == {1: 1.0, 2: 2.0, 4: 2.05}
+
+
+def test_serve_knee_cache_roundtrip(tmp_path):
+    p = str(tmp_path / "calib.json")
+    assert dispatch.load_serve_knee(KEY_BITS, 8, path=p) is None
+    dispatch.save_serve_knee(KEY_BITS, 8, 16, curve={1: 3.0, 16: 9.5},
+                             path=p)
+    assert dispatch.load_serve_knee(KEY_BITS, 8, path=p) == 16
+    # device-keyed: entries live under device_kind()/serve/bits/nk and
+    # coexist with calibrate()'s per-backend entries
+    doc = json.loads(open(p).read())
+    key = f"{dispatch.device_kind()}/serve/{KEY_BITS}/8"
+    assert doc["entries"][key]["window"] == 16
+    doc["entries"]["cpu/gold/128/8"] = {"enc": 1e-4}
+    open(p, "w").write(json.dumps(doc))
+    dispatch.save_serve_knee(256, 8, 4, path=p)
+    assert dispatch.load_serve_knee(KEY_BITS, 8, path=p) == 16
+    assert dispatch.lookup(json.loads(open(p).read()), "gold", 128, 8,
+                           device="cpu") == {"enc": 1e-4}
+
+
+@pytest.mark.parametrize("corruption", [
+    "not json {",
+    json.dumps({"version": -1, "entries": {}}),
+    json.dumps({"version": dispatch.TABLE_VERSION, "entries": []}),
+    json.dumps({"version": dispatch.TABLE_VERSION,
+                "entries": {"cpu/serve/128/8": {"window": 0}}}),
+])
+def test_corrupt_knee_cache_loads_none(tmp_path, corruption):
+    p = tmp_path / "calib.json"
+    p.write_text(corruption)
+    assert dispatch.load_serve_knee(KEY_BITS, 8, path=str(p)) is None
+
+
+def test_auto_admission_uses_cached_knee(inst, tmp_path):
+    A_, y_ = inst.A[:, :16], inst.y
+    p = str(tmp_path / "calib.json")
+    dispatch.save_serve_knee(KEY_BITS, 8, 2, path=p)
+    eng = ProtocolEngine(admission="auto", calib_path=p)
+    for i in range(3):
+        eng.admit(A_, y_, _cfg(cipher="plain", K=2, seed=i), tid=f"t{i}")
+    eng.run()
+    st_ = eng.stats()["serve"]
+    assert st_["window"] == 2
+    assert st_["auto_fallback_sequential"] is False
+
+
+def test_auto_admission_falls_back_sequential_on_corrupt_cache(
+        inst, tmp_path):
+    A_, y_ = inst.A[:, :16], inst.y
+    p = tmp_path / "calib.json"
+    p.write_text("{corrupt")
+    eng = ProtocolEngine(admission="auto", calib_path=str(p))
+    for i in range(2):
+        eng.admit(A_, y_, _cfg(cipher="plain", K=2, seed=i), tid=f"t{i}")
+    res = eng.run()
+    st_ = eng.stats()["serve"]
+    assert st_["window"] == 1
+    assert st_["auto_fallback_sequential"] is True
+    # degraded admission, undamaged tenants
+    for i in range(2):
+        ref = _plain_solo(A_, y_, i, ITERS)
+        assert obs_metrics.reports_equal_modulo_timing(
+            res[f"t{i}"].stats, ref.stats)
+
+
+# ---------------------------------------------------------------------------
+# the multi-modulus rows layer itself (kb=128, two distinct keys fused)
+# ---------------------------------------------------------------------------
+
+def test_rows_ops_bit_exact_across_two_keys():
+    k1 = gold.keygen(128, random.Random(7))
+    k2 = gold.keygen(128, random.Random(8))
+    rng1, rng2 = random.Random(0), random.Random(1)
+    ms1, ms2 = [0, 1, 2**40, 999], [5, 6, 7]
+    rs1 = [gold.rand_r(k1, rng1) for _ in ms1]
+    rs2 = [gold.rand_r(k2, rng2) for _ in ms2]
+    out1, out2 = pb.enc_rows([(k1, ms1, rs1), (k2, ms2, rs2)])
+    assert out1 == [gold.encrypt_crt(k1, m, r) for m, r in zip(ms1, rs1)]
+    assert out2 == [gold.encrypt_crt(k2, m, r) for m, r in zip(ms2, rs2)]
+    d1, d2 = pb.dec_rows([(k1, out1), (k2, out2)])
+    assert d1 == ms1 and d2 == ms2
+    a1, = pb.add_rows([(k1, out1, out1)])
+    assert a1 == [(c * c) % k1.n2 for c in out1]
+
+
+def test_rows_mismatched_widths_raise():
+    """The backstop below the collector's signature check: handing one
+    cluster keys of different limb widths is a hard error, never a
+    silent mis-launch."""
+    k128 = gold.keygen(128, random.Random(7))
+    k256 = gold.keygen(256, random.Random(9))
+    with pytest.raises(ValueError, match="mismatched limb widths"):
+        pb.enc_rows([(k128, [1], [2]), (k256, [1], [2])])
+
+
+def test_serve_is_a_trace_category(inst):
+    assert "serve" in trace_mod.CATEGORIES
+    tr = trace_mod.Tracer()
+    eng = ProtocolEngine(admission="sequential", trace=tr)
+    eng.admit(inst.A[:, :16], inst.y, _cfg(cipher="plain", K=2), tid="t0")
+    eng.run()
+    cats = {s.cat for s in tr.spans}
+    assert "serve" in cats
+    names = {s.name for s in tr.spans if s.cat == "serve"}
+    assert {"serve:admit:t0", "serve:start:t0", "serve:done:t0"} <= names
